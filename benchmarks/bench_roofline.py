@@ -1,0 +1,102 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), hardware = TPU-v5e-class chip:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs   (197e12 bf16; 394e12 for
+               int-dominated quantized serving cells)
+  memory     = HLO_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9  (per-link first-order)
+
+MODEL_FLOPS = 6*N*D (train) or 2*N_active*B (decode) gives the useful-compute
+ratio; cost_analysis FLOPs and collective bytes are per-device (verified
+against a known matmul in tests), so global = x n_devices.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import SHAPES, get_config
+    from repro.models.config import count_active_params, count_params
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n_active = count_active_params(cfg)
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch     # decode: one token/request
+
+
+def analyze_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    n_dev = rec.get("n_devices", 256)
+    flops_dev = rec.get("cost", {}).get("flops", 0.0)
+    bytes_dev = rec.get("cost", {}).get("bytes accessed", 0.0)
+    coll_dev = rec.get("collectives", {}).get("total_bytes", 0.0)
+    quant_serving = rec.get("quant", "none") != "none" and shape != "train_4k"
+    peak = PEAK_INT8 if quant_serving else PEAK_BF16
+    t_comp = flops_dev / peak
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(arch, shape)
+    hlo_global = flops_dev * n_dev
+    useful = mf / hlo_global if hlo_global else 0.0
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful model flops per second at the bound vs peak
+    frac = (mf / n_dev / peak) / bound if bound else 0.0
+    return {
+        "bench": "roofline", "arch": arch, "shape": shape, "mesh": mesh,
+        "quant": rec.get("quant"),
+        "compute_s": f"{t_comp:.3e}", "memory_s": f"{t_mem:.3e}",
+        "collective_s": f"{t_coll:.3e}", "dominant": dominant,
+        "model_flops": f"{mf:.3e}", "useful_ratio": round(useful, 3),
+        "roofline_frac": round(frac, 3),
+        "temp_gb": round((rec.get("memory") or {}).get("temp_bytes", 0)
+                         / 1e9, 2),
+    }
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "skipped":
+            rows.append({"bench": "roofline", "arch": rec["arch"],
+                         "shape": rec["shape"], "mesh": rec["mesh"],
+                         "dominant": "skipped", "note": rec.get("reason", "")})
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "error":
+            rows.append({"bench": "roofline", "arch": rec["arch"],
+                         "shape": rec["shape"], "mesh": rec["mesh"],
+                         "dominant": "ERROR",
+                         "note": rec.get("error", "")[:120]})
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    cols = ["arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+            "collective_s", "useful_ratio", "roofline_frac", "temp_gb"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "---|" * len(cols)]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)

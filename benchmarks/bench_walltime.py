@@ -1,0 +1,59 @@
+"""Wall-time microbenchmarks of the integer-GEMM engine on this container.
+
+CPU wall-times don't reflect TPU performance (the dry-run roofline does);
+they validate the op-count claims end-to-end: the XLA KMM2 path must spend
+~3/4 of the MM2 path's multiply work, which shows up directly in CPU time
+for compute-bound sizes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import int_gemm_jit
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args).block_until_ready()            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run() -> List[Dict]:
+    rng = np.random.default_rng(0)
+    m = k = n = 1024
+    rows = []
+    a8 = jnp.array(rng.integers(-120, 120, (m, k)), jnp.int32)
+    b8 = jnp.array(rng.integers(-120, 120, (k, n)), jnp.int32)
+    lim = 2**11
+    a12 = jnp.array(rng.integers(-lim, lim, (m, k)), jnp.int32)
+    b12 = jnp.array(rng.integers(-lim, lim, (k, n)), jnp.int32)
+
+    t_mm1 = _time(lambda a, b: int_gemm_jit(a, b, 8), a8, b8)
+    t_kmm = _time(lambda a, b: int_gemm_jit(a, b, 12), a12, b12)
+    t_mm2 = _time(lambda a, b: int_gemm_jit(a, b, 16), a12, b12)
+    rows.append({"bench": "walltime", "name": "int_gemm_w8_mm1_1024",
+                 "us_per_call": round(t_mm1, 1), "passes": 1})
+    rows.append({"bench": "walltime", "name": "int_gemm_w12_kmm2_1024",
+                 "us_per_call": round(t_kmm, 1), "passes": 3})
+    rows.append({"bench": "walltime", "name": "int_gemm_w16_mm2_1024",
+                 "us_per_call": round(t_mm2, 1), "passes": 4})
+    ratio = t_kmm / t_mm2
+    rows.append({"bench": "walltime", "name": "kmm2_over_mm2_time_ratio",
+                 "us_per_call": round(ratio, 3),
+                 "expect": "~0.75 (3 vs 4 digit products)"})
+    return rows
+
+
+def checks(rows):
+    ratio = next(r["us_per_call"] for r in rows
+                 if r["name"] == "kmm2_over_mm2_time_ratio")
+    return [("KMM2 wall-time < MM2 wall-time (3 vs 4 products)",
+             ratio < 1.0, f"ratio {ratio}")]

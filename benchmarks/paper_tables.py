@@ -1,0 +1,218 @@
+"""Reproductions of every paper table/figure, one function each.
+
+Each returns (rows, checks): ``rows`` = list of dicts (printed as CSV by
+run.py); ``checks`` = list of (claim, ok, detail) asserting the paper's
+qualitative/quantitative statements against our implementation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.core.area import area_kmm, area_ksmm, area_mm1, au_efficiency_vs_mm1
+from repro.core.complexity import kmm_arith, ksmm_arith, mm_arith
+from repro.core.dispatch import select_mode
+from repro.core.efficiency import precision_scalable_roof, roof
+from benchmarks.workloads import mxu_cycles, resnet_gemms
+
+Check = Tuple[str, bool, str]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 — arithmetic complexity of MM_n / KSMM_n relative to KMM_n (d=64).
+# ---------------------------------------------------------------------------
+
+
+def fig5(d: int = 64):
+    rows, checks = [], []
+    for n in (2, 4, 8, 16, 32):
+        r_mm = mm_arith(n, d) / kmm_arith(n, d)
+        r_ksmm = ksmm_arith(n, d) / kmm_arith(n, d)
+        rows.append({"bench": "fig5", "n": n, "d": d,
+                     "mm_over_kmm": round(r_mm, 3),
+                     "ksmm_over_kmm": round(r_ksmm, 3)})
+    checks.append(("KSMM_n > 1.75x KMM_n ops (all n)",
+                   all(r["ksmm_over_kmm"] > 1.75 for r in rows), ""))
+    checks.append(("KMM < MM from n=2",
+                   rows[0]["mm_over_kmm"] > 1.0,
+                   f"n=2 ratio {rows[0]['mm_over_kmm']}"))
+    checks.append(("KSMM < MM only for n > 4",
+                   ksmm_arith(4, d) > mm_arith(4, d)
+                   and ksmm_arith(8, d) < mm_arith(8, d), ""))
+    return rows, checks
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11 — precision-scalable multiplier compute efficiency roofs (m=8).
+# ---------------------------------------------------------------------------
+
+
+def fig11(m: int = 8):
+    rows, checks = [], []
+    for w in range(2, 17):
+        rows.append({
+            "bench": "fig11", "w": w,
+            "mm2_roof": round(precision_scalable_roof("mm", w, m), 3),
+            "kmm2_roof": round(precision_scalable_roof("kmm", w, m), 3),
+            "mode": select_mode(w, m).mode.value,
+        })
+    in_window = [r for r in rows if 9 <= r["w"] <= 14]
+    checks.append(("KMM roof = 4/3 for w in 9..14",
+                   all(abs(r["kmm2_roof"] - 4 / 3) < 1e-3 for r in in_window),
+                   ""))
+    checks.append(("MM roof = 1 everywhere",
+                   all(abs(r["mm2_roof"] - 1.0) < 1e-9 for r in rows), ""))
+    return rows, checks
+
+
+# ---------------------------------------------------------------------------
+# Fig. 12 — AU compute efficiency of fixed-precision architectures.
+# ---------------------------------------------------------------------------
+
+
+def fig12():
+    rows, checks = [], []
+    for w in (8, 16, 24, 32, 40, 48, 56, 64):
+        kmm = au_efficiency_vs_mm1("kmm", w)
+        ksmm = au_efficiency_vs_mm1("ksmm", w, n=2)
+        rows.append({"bench": "fig12", "w": w,
+                     "kmm_vs_mm1": round(kmm.relative, 3),
+                     "ksmm_vs_mm1": round(ksmm.relative, 3)})
+    checks.append(("KMM crosses MM1 at lower w than KSMM",
+                   next(r["w"] for r in rows if r["kmm_vs_mm1"] > 1)
+                   < next(r["w"] for r in rows if r["ksmm_vs_mm1"] > 1), ""))
+    checks.append(("KMM >= KSMM at every width",
+                   all(r["kmm_vs_mm1"] > r["ksmm_vs_mm1"] for r in rows), ""))
+    return rows, checks
+
+
+# ---------------------------------------------------------------------------
+# Table I — precision-scalable KMM vs MM system model (ResNets, 64x64 MXU).
+# ---------------------------------------------------------------------------
+
+_PAPER_T1 = {   # depth: (mm2_eff_8bit, kmm_eff_9_14) from Table I
+    50: (0.792, 1.055), 101: (0.865, 1.154), 152: (0.898, 1.197),
+}
+_FREQ = {"mm2": 320e6, "kmm2": 326e6}
+_FILL = 32   # pipeline fill/drain per tile (calibrated; see workloads.py)
+
+
+def table1():
+    rows, checks = [], []
+    n_mult = 64 * 64
+    for depth, (eff8_paper, effk_paper) in _PAPER_T1.items():
+        g = resnet_gemms(depth)
+        macs = sum(x.macs for x in g)
+        for mode, passes, wlab in (("mm1", 1, "1-8"), ("kmm2", 3, "9-14"),
+                                   ("mm2", 4, "15-16")):
+            cyc = mxu_cycles(g, passes=passes, fill=_FILL)
+            # Eq. 12: conventional m-bit mult count / (cycles * multipliers);
+            # w>8 conventional algebra needs 4 passes (Eq. 13)
+            conv = macs * (1 if wlab == "1-8" else 4)
+            eff = conv / (cyc * n_mult)
+            f = _FREQ["kmm2"] if mode == "kmm2" else _FREQ["mm2"]
+            gops = 2 * macs / (cyc / f) / 1e9
+            rows.append({"bench": "table1", "model": f"resnet-{depth}",
+                         "mode": mode, "w": wlab,
+                         "eff_model": round(eff, 3), "gops_model": round(gops),
+                         "eff_paper": eff8_paper if wlab == "1-8"
+                         else (effk_paper if wlab == "9-14" else
+                               round(eff8_paper, 3))})
+        ours = [r for r in rows if r["model"] == f"resnet-{depth}"]
+        kmm_eff = next(r["eff_model"] for r in ours if r["mode"] == "kmm2")
+        mm1_eff = next(r["eff_model"] for r in ours if r["mode"] == "mm1")
+        checks.append((f"resnet-{depth}: KMM2 eff = 4/3 x 8-bit eff",
+                       abs(kmm_eff / mm1_eff - 4 / 3) < 5e-3,
+                       f"{kmm_eff}/{mm1_eff}"))
+        checks.append((f"resnet-{depth}: KMM2 eff surpasses prior-work roof 1",
+                       kmm_eff > 1.0, f"{kmm_eff}"))
+        checks.append((f"resnet-{depth}: model within 6% of paper Table I",
+                       abs(mm1_eff - eff8_paper) / eff8_paper < 0.06,
+                       f"model {mm1_eff} vs paper {eff8_paper}"))
+    return rows, checks
+
+
+# ---------------------------------------------------------------------------
+# Table II — FFIP and FFIP+KMM combined roofs/system model.
+# ---------------------------------------------------------------------------
+
+
+def table2():
+    rows, checks = [], []
+    n_mult = 64 * 32   # FFIP MXU: half the multipliers (64x64-equivalent)
+    for depth in (50, 101, 152):
+        g = resnet_gemms(depth)
+        macs = sum(x.macs for x in g)
+        for mode, passes, wlab, mult_factor in (
+                ("ffip", 1, "1-8", 2.0), ("ffip_kmm2", 3, "9-14", 2.0),
+                ("ffip_mm2", 4, "15-16", 2.0)):
+            # FFIP: each PE multiplier covers TWO MACs, so the 64x32-mult
+            # array sustains a 64x64 MAC tile per pass (paper [6]).
+            cyc = mxu_cycles(g, x=64, y=64, passes=passes, fill=_FILL)
+            conv = macs * (1 if wlab == "1-8" else 4)
+            eff = conv / (cyc * n_mult)
+            rows.append({"bench": "table2", "model": f"resnet-{depth}",
+                         "mode": mode, "w": wlab, "eff_model": round(eff, 3)})
+        ours = [r for r in rows if r["model"] == f"resnet-{depth}"]
+        e_ffip = next(r["eff_model"] for r in ours if r["mode"] == "ffip")
+        e_combo = next(r["eff_model"] for r in ours
+                       if r["mode"] == "ffip_kmm2")
+        checks.append((f"resnet-{depth}: FFIP+KMM surpasses FFIP limit 2",
+                       e_combo > 2.0, f"{e_combo}"))
+        checks.append((f"resnet-{depth}: FFIP+KMM approaches 8/3",
+                       2.0 < e_combo < 8 / 3 + 1e-9, f"{e_combo} vs 2.667"))
+    checks.append(("roof algebra: ffip=2, ffip+kmm=8/3 at w=16",
+                   roof("ffip", 16, 8) == 2.0
+                   and abs(roof("ffip_kmm", 16, 8) - 8 / 3) < 1e-9, ""))
+    return rows, checks
+
+
+# ---------------------------------------------------------------------------
+# Table III — fixed-precision DSP/area/frequency model (Agilex 7).
+# ---------------------------------------------------------------------------
+
+_PAPER_T3 = {
+    # arch: (dsps, alms_k, freq_mhz) from Table III (non-pipelined variants)
+    ("mm1", 32): (2048, 64, 450), ("ksmm", 32): (1536, 138, 386),
+    ("kmm", 32): (1536, 68, 622),
+    ("mm1", 64): (8704, 240, 203), ("ksmm", 64): (4608, 554, 147),
+    ("kmm", 64): (4608, 212, 552),
+}
+
+
+def table3():
+    """DSP counts follow multiplication counts (2 mults/DSP on Agilex);
+    ALM trends follow the AU adder model; frequencies are synthesis facts we
+    report from the paper (no TPU analogue — DESIGN.md §8)."""
+    rows, checks = [], []
+    xy = 32 * 32
+    for (arch, w), (dsps_p, alms_p, freq_p) in _PAPER_T3.items():
+        n = 2 if w == 32 else 4
+        r = int(math.log2(n))
+        if arch == "mm1":
+            mults = xy * 4**r
+            area = area_mm1(w, x=32, y=32)
+        elif arch == "ksmm":
+            mults = xy * 3**r
+            area = area_ksmm(n, w, x=32, y=32)
+        else:
+            mults = xy * 3**r
+            area = area_kmm(n, w, x=32, y=32)
+        dsps_model = mults // 2
+        rows.append({"bench": "table3", "arch": arch, "w": w,
+                     "dsps_model": dsps_model, "dsps_paper": dsps_p,
+                     "au_area_k": round(area / 1e3), "alms_paper_k": alms_p,
+                     "freq_paper_mhz": freq_p})
+    for w in (32, 64):
+        ours = {r["arch"]: r for r in rows if r["w"] == w}
+        checks.append((f"w={w}: KMM/KSMM use 3^r mults vs MM1 4^r (DSP dip)",
+                       ours["kmm"]["dsps_model"] < ours["mm1"]["dsps_model"],
+                       ""))
+        checks.append((f"w={w}: KMM model DSPs within 25% of paper",
+                       abs(ours["kmm"]["dsps_model"] - ours["kmm"]["dsps_paper"])
+                       / ours["kmm"]["dsps_paper"] < 0.25,
+                       f"{ours['kmm']['dsps_model']} vs {ours['kmm']['dsps_paper']}"))
+        checks.append((f"w={w}: KMM soft-logic area < KSMM (ALM reduction)",
+                       ours["kmm"]["au_area_k"] < ours["ksmm"]["au_area_k"],
+                       ""))
+    return rows, checks

@@ -1,0 +1,66 @@
+"""Benchmark harness entry: one reproduction per paper table/figure plus the
+wall-time microbench and the dry-run roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-walltime]
+
+Prints ``name,us_per_call,derived`` CSV rows followed by CHECK lines that
+assert the paper's claims against our implementation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows, checks, csv_lines, check_lines):
+    for r in rows:
+        name = r.get("name") or "/".join(
+            str(r.get(k)) for k in ("bench", "model", "arch", "mode", "shape",
+                                    "n", "w", "mesh") if r.get(k) is not None)
+        us = r.get("us_per_call", 0)
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("bench", "name", "us_per_call"))
+        csv_lines.append(f"{name},{us},{derived}")
+    for claim, ok, detail in checks:
+        check_lines.append(
+            f"CHECK {'PASS' if ok else 'FAIL'}: {claim}"
+            + (f" [{detail}]" if detail else ""))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-walltime", action="store_true")
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from benchmarks import bench_roofline, bench_walltime, paper_tables
+
+    csv_lines = ["name,us_per_call,derived"]
+    check_lines = []
+
+    t0 = time.time()
+    for fn in (paper_tables.fig5, paper_tables.fig11, paper_tables.fig12,
+               paper_tables.table1, paper_tables.table2, paper_tables.table3):
+        rows, checks = fn()
+        _emit(rows, checks, csv_lines, check_lines)
+
+    if not args.skip_walltime:
+        rows = bench_walltime.run()
+        _emit(rows, bench_walltime.checks(rows), csv_lines, check_lines)
+
+    roof_rows = bench_roofline.run(args.dryrun_dir)
+    _emit(roof_rows, [], csv_lines, check_lines)
+
+    print("\n".join(csv_lines))
+    print()
+    print("\n".join(check_lines))
+    n_fail = sum(1 for line in check_lines if "FAIL" in line)
+    print(f"\n{len(check_lines) - n_fail}/{len(check_lines)} checks passed "
+          f"({time.time() - t0:.1f}s)")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

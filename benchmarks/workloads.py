@@ -1,0 +1,67 @@
+"""ResNet im2col GEMM workloads (paper Tables I-II evaluate ResNet-50/101/152).
+
+Each conv layer becomes a GEMM: M = H_out*W_out, K = C_in*k*k, N = C_out.
+The metrics in Tables I-II depend only on these GEMM dims, the MXU tiling,
+the pass count of the executed mode, and the clock — not on real images.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class Gemm:
+    m: int
+    k: int
+    n: int
+
+    @property
+    def macs(self) -> int:
+        return self.m * self.k * self.n
+
+
+def _bottleneck(m: int, c_in: int, width: int, stride: int) -> List[Gemm]:
+    """1x1 reduce -> 3x3 -> 1x1 expand (+ projection on the first block)."""
+    m_out = m // (stride * stride)
+    out = [
+        Gemm(m_out, c_in, width),            # 1x1 (stride folded into M)
+        Gemm(m_out, width * 9, width),       # 3x3
+        Gemm(m_out, width, width * 4),       # 1x1 expand
+    ]
+    if c_in != width * 4:
+        out.append(Gemm(m_out, c_in, width * 4))   # projection shortcut
+    return out
+
+
+def resnet_gemms(depth: int, image: int = 224) -> List[Gemm]:
+    blocks = {50: (3, 4, 6, 3), 101: (3, 4, 23, 3), 152: (3, 8, 36, 3)}[depth]
+    g: List[Gemm] = [Gemm((image // 2) ** 2, 147, 64)]      # conv1 7x7/2
+    m = (image // 4) ** 2                                    # after maxpool
+    c_in = 64
+    for stage, n_blocks in enumerate(blocks):
+        width = 64 * 2**stage
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            g.extend(_bottleneck(m, c_in, width, stride))
+            m = m // (stride * stride)
+            c_in = width * 4
+    g.append(Gemm(1, 2048, 1000))                            # fc
+    return g
+
+
+def total_macs(depth: int) -> int:
+    return sum(x.macs for x in resnet_gemms(depth))
+
+
+def mxu_cycles(gemms: List[Gemm], x: int = 64, y: int = 64,
+               passes: int = 1, fill: int = 64) -> int:
+    """Cycle model of the paper's MXU (Fig. 7): a (y=K-rows x x=N-cols) B
+    tile is preloaded (hidden by double buffering); the A tile streams M rows
+    producing one output row per cycle; `fill` models pipeline fill/drain per
+    tile; `passes` is the precision-scalable re-read count (1/3/4)."""
+    cyc = 0
+    for g in gemms:
+        tiles = -(-g.k // y) * (-(-g.n // x))
+        cyc += tiles * (g.m + fill)
+    return cyc * passes

@@ -1,0 +1,7 @@
+"""repro: Karatsuba Matrix Multiplication (KMM) as a production JAX framework.
+
+The paper's contribution lives in repro.core (algorithms + cost models),
+repro.kernels (Pallas MXU kernels), and repro.quant (the precision-scalable
+quantized execution path used by every model in repro.models).
+"""
+__version__ = "1.0.0"

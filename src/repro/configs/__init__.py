@@ -1,0 +1,79 @@
+"""Architecture registry: ``get_config(arch, smoke=False, quant=...)``.
+
+Input-shape cells (LM-family, per assignment):
+  train_4k     seq_len=4096   global_batch=256  (training, train_step)
+  prefill_32k  seq_len=32768  global_batch=32   (inference prefill)
+  decode_32k   seq_len=32768  global_batch=128  (one-token decode w/ KV cache)
+  long_500k    seq_len=524288 global_batch=1    (long-context decode;
+               sub-quadratic archs only — see DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.models.config import ModelConfig
+from repro.quant.policy import QuantConfig, POLICY_MIXED, POLICY_W12, POLICY_W8
+
+_MODULES = {
+    "gemma-2b": "gemma_2b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "stablelm-12b": "stablelm_12b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+QUANT_POLICIES = {
+    "none": QuantConfig(),
+    "w8": POLICY_W8,
+    "w12": POLICY_W12,
+    "mixed": POLICY_MIXED,
+    # conventional 4-product digit GEMM at the same width: the paper's
+    # baseline that KMM2's 3 products are measured against (§Perf)
+    "w12-mm2": QuantConfig(enabled=True, default_bits=12, force_mode="mm2"),
+}
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def list_archs():
+    return sorted(_MODULES)
+
+
+def get_config(arch: str, *, smoke: bool = False,
+               quant: Optional[str] = None) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choices: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    cfg: ModelConfig = mod.SMOKE if smoke else mod.CONFIG
+    if quant is not None:
+        cfg = cfg.with_quant(QUANT_POLICIES[quant])
+    return cfg
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """The assignment's skip rules (documented in DESIGN.md §5)."""
+    cell = SHAPES[shape]
+    if cell.name == "long_500k":
+        return cfg.sub_quadratic
+    return True

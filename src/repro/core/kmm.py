@@ -1,0 +1,259 @@
+"""Karatsuba matrix multiplication (KMM) — tensor forms of Algorithms 1-4.
+
+This module implements the paper's algorithm family on JAX arrays:
+
+  * ``sm_n``   — Algorithm 1, conventional n-digit *scalar* multiplication
+                 (elementwise over arrays).
+  * ``ksm_n``  — Algorithm 2, n-digit Karatsuba scalar multiplication
+                 (elementwise over arrays).
+  * ``mm_n``   — Algorithm 3, conventional n-digit matrix multiplication
+                 (4 digit-plane products per level).
+  * ``kmm_n``  — Algorithm 4, n-digit Karatsuba matrix multiplication
+                 (3 digit-plane products per level).
+  * ``ksmm``   — KSM used elementwise inside a conventional matmul (the
+                 paper's KSMM baseline, Section III-B.3).
+
+Digit decomposition follows the paper exactly: a ``w``-bit integer ``x`` is
+split at ``h = ceil(w/2)`` into ``x = x1 * 2**h + x0`` where ``x0`` is the
+unsigned low ``h`` bits and ``x1`` the (possibly signed) high ``w - h`` bits.
+For two's-complement integers carried in a wider dtype, the identity
+``x == (x >> h) * 2**h + (x & (2**h - 1))`` holds for arbitrary sign, so the
+algorithms below are exact for signed and unsigned inputs alike as long as the
+carrier dtype does not overflow.
+
+Hardware adaptation (see DESIGN.md §2): on TPU each digit-plane product is one
+m-bit MXU pass.  On this CPU container digit planes are carried in int32 (or
+int64 under ``jax.experimental.enable_x64``) with identical bit-exact
+semantics.  ``max_exact_k`` gives the contraction-length bound below which the
+int32 carrier is provably exact.
+
+The base-case matmul (``MM_1`` in the paper, line 15/16 of Algorithms 3/4) is
+injectable via the ``mm1`` argument so the same recursion drives the XLA
+``dot_general`` path, the Algorithm-5 pre-accumulation path
+(:mod:`repro.core.accum`), or the Pallas MXU kernels
+(:mod:`repro.kernels.ops`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+# Base matmul: (lhs, rhs, dimension_numbers) -> product with int accumulation.
+Mm1Fn = Callable[[Array, Array, lax.DotDimensionNumbers], Array]
+
+# Canonical dimension numbers for a plain (M, K) x (K, N) matmul.
+MATMUL_DIMS: lax.DotDimensionNumbers = (((1,), (0,)), ((), ()))
+
+
+def default_mm1(accum_dtype=jnp.int32) -> Mm1Fn:
+    """Base-case MM_1: a single dot_general with exact integer accumulation."""
+
+    def mm1(a: Array, b: Array, dims: lax.DotDimensionNumbers) -> Array:
+        return lax.dot_general(a, b, dims, preferred_element_type=accum_dtype)
+
+    return mm1
+
+
+def digit_split(x: Array, h: int) -> Tuple[Array, Array]:
+    """Split integers into (high, low) digits at bit ``h``.
+
+    ``low`` is the unsigned value of the low ``h`` bits; ``high`` is the
+    arithmetically-shifted remainder, so ``x == (high << h) + low`` exactly
+    in two's complement.
+    """
+    if h <= 0:
+        raise ValueError(f"digit width must be positive, got {h}")
+    mask = jnp.asarray((1 << h) - 1, dtype=x.dtype)
+    lo = jnp.bitwise_and(x, mask)
+    hi = jnp.right_shift(x, jnp.asarray(h, dtype=x.dtype))
+    return hi, lo
+
+
+def _shift_left(x: Array, s: int) -> Array:
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.left_shift(x, jnp.asarray(s, dtype=x.dtype))
+    return x * jnp.asarray(2.0**s, dtype=x.dtype)
+
+
+def _split_widths(w: int) -> Tuple[int, int, int]:
+    """(w_hi, w_lo, h): bit widths of the high/low digits and the split point."""
+    h = -(-w // 2)  # ceil(w/2)
+    return w - h, h, h
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 / 2 — scalar (elementwise) n-digit multiplication.
+# ---------------------------------------------------------------------------
+
+
+def sm_n(a: Array, b: Array, *, w: int, n: int) -> Array:
+    """Algorithm 1: conventional n-digit scalar multiplication, elementwise."""
+    _check_n(n)
+    if n == 1:
+        return a * b
+    w_hi, w_lo, h = _split_widths(w)
+    a1, a0 = digit_split(a, h)
+    b1, b0 = digit_split(b, h)
+    c1 = sm_n(a1, b1, w=max(w_hi, 1), n=n // 2)
+    c10 = sm_n(a1, b0, w=w_lo, n=n // 2)
+    c01 = sm_n(a0, b1, w=w_lo, n=n // 2)
+    c0 = sm_n(a0, b0, w=w_lo, n=n // 2)
+    c = _shift_left(c1, 2 * h)
+    c = c + _shift_left(c10 + c01, h)
+    return c + c0
+
+
+def ksm_n(a: Array, b: Array, *, w: int, n: int) -> Array:
+    """Algorithm 2: n-digit Karatsuba scalar multiplication, elementwise."""
+    _check_n(n)
+    if n == 1:
+        return a * b
+    w_hi, w_lo, h = _split_widths(w)
+    a1, a0 = digit_split(a, h)
+    b1, b0 = digit_split(b, h)
+    a_s = a1 + a0
+    b_s = b1 + b0
+    c1 = ksm_n(a1, b1, w=max(w_hi, 1), n=n // 2)
+    cs = ksm_n(a_s, b_s, w=w_lo + 1, n=n // 2)
+    c0 = ksm_n(a0, b0, w=w_lo, n=n // 2)
+    c = _shift_left(c1, 2 * h)
+    c = c + _shift_left(cs - c1 - c0, h)
+    return c + c0
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 / 4 — n-digit matrix multiplication.
+# ---------------------------------------------------------------------------
+
+
+def mm_n(
+    a: Array,
+    b: Array,
+    *,
+    w: int,
+    n: int,
+    dimension_numbers: lax.DotDimensionNumbers = MATMUL_DIMS,
+    mm1: Optional[Mm1Fn] = None,
+    combine_dtype=None,
+) -> Array:
+    """Algorithm 3: conventional n-digit matrix multiplication (4 products)."""
+    _check_n(n)
+    mm1 = mm1 or default_mm1()
+    if n == 1:
+        out = mm1(a, b, dimension_numbers)
+        return out if combine_dtype is None else out.astype(combine_dtype)
+    w_hi, w_lo, h = _split_widths(w)
+    a1, a0 = digit_split(a, h)
+    b1, b0 = digit_split(b, h)
+    kw = dict(dimension_numbers=dimension_numbers, mm1=mm1,
+              combine_dtype=combine_dtype)
+    c1 = mm_n(a1, b1, w=max(w_hi, 1), n=n // 2, **kw)
+    c10 = mm_n(a1, b0, w=w_lo, n=n // 2, **kw)
+    c01 = mm_n(a0, b1, w=w_lo, n=n // 2, **kw)
+    c0 = mm_n(a0, b0, w=w_lo, n=n // 2, **kw)
+    c = _shift_left(c1, 2 * h)
+    c = c + _shift_left(c10 + c01, h)
+    return c + c0
+
+
+def kmm_n(
+    a: Array,
+    b: Array,
+    *,
+    w: int,
+    n: int,
+    dimension_numbers: lax.DotDimensionNumbers = MATMUL_DIMS,
+    mm1: Optional[Mm1Fn] = None,
+    combine_dtype=None,
+) -> Array:
+    """Algorithm 4: n-digit Karatsuba matrix multiplication (3 products).
+
+    ``combine_dtype`` (optional) casts each digit-plane product before the
+    shift-combine.  The TPU-faithful quantized path passes ``jnp.float32``
+    here: every digit-plane product is an exact int32 MXU result and only the
+    final recombination (which in the paper's hardware runs on wide
+    accumulators that have no int32 TPU analogue) is carried in fp32 — see
+    DESIGN.md §2.
+    """
+    _check_n(n)
+    mm1 = mm1 or default_mm1()
+    if n == 1:
+        out = mm1(a, b, dimension_numbers)
+        return out if combine_dtype is None else out.astype(combine_dtype)
+    w_hi, w_lo, h = _split_widths(w)
+    a1, a0 = digit_split(a, h)
+    b1, b0 = digit_split(b, h)
+    a_s = a1 + a0
+    b_s = b1 + b0
+    kw = dict(dimension_numbers=dimension_numbers, mm1=mm1,
+              combine_dtype=combine_dtype)
+    c1 = kmm_n(a1, b1, w=max(w_hi, 1), n=n // 2, **kw)
+    cs = kmm_n(a_s, b_s, w=w_lo + 1, n=n // 2, **kw)
+    c0 = kmm_n(a0, b0, w=w_lo, n=n // 2, **kw)
+    c = _shift_left(c1, 2 * h)
+    c = c + _shift_left(cs - c1 - c0, h)
+    return c + c0
+
+
+def ksmm(a: Array, b: Array, *, w: int, n: int) -> Array:
+    """KSMM baseline: conventional matmul with KSM used per scalar product.
+
+    Materializes the (M, K, N) product tensor, so use on small shapes only —
+    it exists as the paper's comparison baseline (Section III-B.3), not as a
+    production path.
+    """
+    prod = ksm_n(a[..., :, :, None], b[..., None, :, :], w=w, n=n)
+    return prod.sum(axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Exactness bounds.
+# ---------------------------------------------------------------------------
+
+
+def max_exact_k(w: int, carrier_bits: int = 31) -> int:
+    """Largest contraction length K for which an MM/KMM combine of unsigned
+    ``w``-bit operands is exact in a signed ``carrier_bits+1``-bit carrier.
+
+    The widest intermediate is the recombined product ``~2**(2w)`` times the
+    accumulation head-room, so K <= 2**(carrier_bits - 2w).
+    """
+    head = carrier_bits - 2 * w
+    return max(1 << head, 1) if head > 0 else 0
+
+
+def _check_n(n: int) -> None:
+    if n < 1 or (n & (n - 1)) != 0:
+        raise ValueError(f"digit count n must be a positive power of two, got {n}")
+
+
+# ---------------------------------------------------------------------------
+# Convenience: einsum-style wrappers used by the quantized layers.
+# ---------------------------------------------------------------------------
+
+
+def matmul_dims_for(lhs_ndim: int, rhs_ndim: int) -> lax.DotDimensionNumbers:
+    """dot_general dims contracting lhs[-1] with rhs[-2]; no batch dims."""
+    return (((lhs_ndim - 1,), (rhs_ndim - 2,)), ((), ()))
+
+
+@functools.partial(jax.jit, static_argnames=("w", "n", "combine_dtype"))
+def kmm_matmul(a: Array, b: Array, w: int, n: int = 2, combine_dtype=None) -> Array:
+    """jit'd KMM for stacked matrices: a[..., M, K] @ b[K, N] or [..., K, N]."""
+    if b.ndim == 2:
+        dims = matmul_dims_for(a.ndim, 2)
+        return kmm_n(a, b, w=w, n=n, dimension_numbers=dims,
+                     combine_dtype=combine_dtype)
+    # Batched: match leading dims as batch.
+    nbatch = b.ndim - 2
+    dims = (
+        ((a.ndim - 1,), (nbatch,)),
+        (tuple(range(nbatch)), tuple(range(nbatch))),
+    )
+    return kmm_n(a, b, w=w, n=n, dimension_numbers=dims,
+                 combine_dtype=combine_dtype)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; see DESIGN.md §2).
+
+kmm_gemm  — KMM2 integer GEMM: 3 digit-plane MXU passes + Algorithm-5
+            two-level accumulation (the paper's Fig. 8 architecture).
+mm2_gemm  — conventional 4-pass baseline (Fig. 3).
+mm1_gemm  — single-pass int8 baseline (Fig. 7).
+wkv_gemm  — RWKV6 recurrence with state resident in VMEM.
+ffip      — FFIP reference + why it has no MXU analogue.
+ops       — dispatching wrapper (digit planes, zero-point correction).
+ref       — pure-jnp oracles.
+"""
+from repro.kernels.ops import int_gemm, int_gemm_jit

@@ -1,0 +1,46 @@
+"""FFIP — free-pipeline fast inner-product (paper's prior work [6], Table II).
+
+FFIP halves multiplier count by computing, inside each PE,
+``(a_even + b_odd) * (a_odd + b_even)`` — one multiply where a MAC array needs
+two — and subtracting row-only/column-only correction sums.
+
+Hardware-adaptation note (DESIGN.md §2/§8): FFIP's mechanism is a *PE-array*
+trick — an adder placed before the multiplier inside every processing
+element.  The TPU MXU is a fixed multiply-accumulate systolic array whose
+operand paths cannot be pre-added across LHS/RHS, so FFIP has **no TPU kernel
+analogue**; algebraically the decomposition collapses back to
+``ae @ be + ao @ bo`` when executed on fixed matmul units (same multiply
+count).  We therefore implement FFIP as (1) a literal reference used to
+validate the algebra and (2) the efficiency/throughput model behind the
+Table II reproduction — not as a Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ffip_gemm_literal(a: Array, b: Array) -> Array:
+    """Literal FFIP evaluation (materializes (M, K/2, N); small shapes only).
+
+    c_ij = sum_k (ae_ik + bo_kj)(ao_ik + be_kj) - sum_k ae_ik*ao_ik
+           - sum_k be_kj*bo_kj
+    """
+    assert a.shape[1] % 2 == 0, "FFIP needs even K"
+    ae, ao = a[:, 0::2].astype(jnp.int32), a[:, 1::2].astype(jnp.int32)
+    be, bo = b[0::2, :].astype(jnp.int32), b[1::2, :].astype(jnp.int32)
+    # (M, K/2, N): (ae + bo) and (ao + be) with broadcast over the other side.
+    lhs = ae[:, :, None] + bo[None, :, :]
+    rhs = ao[:, :, None] + be[None, :, :]
+    prod = (lhs * rhs).sum(axis=1)
+    a_corr = (ae * ao).sum(axis=1, keepdims=True)
+    b_corr = (be * bo).sum(axis=0, keepdims=True)
+    return prod - a_corr - b_corr
+
+
+def ffip_mults(m: int, k: int, n: int) -> int:
+    """Multiplications FFIP spends on an (M,K)x(K,N) GEMM: half the MACs plus
+    the amortized row/col correction products."""
+    return m * n * (k // 2) + m * (k // 2) + n * (k // 2)

@@ -1,0 +1,149 @@
+"""High-level integer GEMM entry point: dispatch + digit planes + corrections.
+
+``int_gemm(a, b, w)`` is the production API: signed w-bit integer operands
+(carried in int32) multiplied exactly through the mode the paper's
+precision-scalable rule selects (MM1 / KMM2 / MM2), on either the Pallas MXU
+kernels (``backend="pallas"``) or plain XLA dot_generals (``backend="xla"``,
+the default — used inside pjit'd model code so SPMD partitioning and the
+dry-run cost analysis see ordinary dots).
+
+Digit handling for the Pallas path (see kmm_gemm.py): split at h = ceil(w/2),
+center the low digit by z = 2^(h-1) so all planes are s8, then fold the
+centering back with the paper's zero-point-adjuster correction:
+
+    A@B = Abar@Bbar + z*rowsum(Abar) + z*colsum(Bbar) + K*z^2
+
+(rowsum broadcast over columns, colsum over rows).  Zero padding commutes
+with the correction because split(0) = (0, -z) and the K term uses padded K.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import Mode, select_mode
+from repro.core.kmm import kmm_n, mm_n, max_exact_k
+from repro.kernels.kmm_gemm import kmm2_gemm_planes
+from repro.kernels.mm1_gemm import mm1_gemm
+from repro.kernels.mm2_gemm import mm2_gemm_planes
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, mult0: int, mult1: int) -> Array:
+    p0 = (-x.shape[0]) % mult0
+    p1 = (-x.shape[1]) % mult1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _planes(x: Array, h: int):
+    z = 1 << (h - 1)
+    xi = x.astype(jnp.int32)
+    hi = jnp.right_shift(xi, h).astype(jnp.int8)
+    lo = (jnp.bitwise_and(xi, (1 << h) - 1) - z).astype(jnp.int8)
+    return hi, lo, z
+
+
+def int_gemm(
+    a: Array,
+    b: Array,
+    *,
+    w: int,
+    m: int = 8,
+    backend: str = "xla",
+    exact: bool = False,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Integer GEMM with precision-scalable dispatch (paper Fig. 10).
+
+    a: (M, K) signed w-bit values in an integer dtype; b: (K, N) likewise.
+    Returns float32 (or int32 when ``exact=True``, which asserts the int32
+    exactness bound 2w + log2(K) + 2 <= 31 and uses integer combines).
+    """
+    plan = select_mode(w, m)
+    k_dim = a.shape[-1]
+    if exact and max_exact_k(w) < k_dim:
+        raise ValueError(
+            f"exact int32 output impossible for w={w}, K={k_dim}; "
+            f"max exact K is {max_exact_k(w)}")
+    if backend == "xla":
+        return _int_gemm_xla(a, b, plan=plan, exact=exact)
+    if backend == "pallas":
+        return _int_gemm_pallas(
+            a, b, plan=plan, exact=exact, block_m=block_m, block_n=block_n,
+            block_k=block_k, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _int_gemm_xla(a: Array, b: Array, *, plan, exact: bool) -> Array:
+    combine = jnp.int32 if exact else jnp.float32
+    ai, bi = a.astype(jnp.int32), b.astype(jnp.int32)
+    if plan.mode is Mode.MM1:
+        out = jax.lax.dot_general(ai, bi, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        return out if exact else out.astype(jnp.float32)
+    fn = kmm_n if plan.mode is Mode.KMM2 else mm_n
+    return fn(ai, bi, w=plan.w, n=plan.digits, combine_dtype=combine)
+
+
+def _int_gemm_pallas(a: Array, b: Array, *, plan, exact: bool,
+                     block_m: int, block_n: int, block_k: int,
+                     interpret: Optional[bool]) -> Array:
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    a = _pad_to(a.astype(jnp.int32), block_m, block_k)
+    b = _pad_to(b.astype(jnp.int32), block_k, block_n)
+    kp = a.shape[1]
+    if plan.mode is Mode.MM1:
+        out = mm1_gemm(a.astype(jnp.int8), b.astype(jnp.int8),
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       interpret=interpret)
+        out = out[:m_dim, :n_dim]
+        return out if exact else out.astype(jnp.float32)
+    if plan.recursion > 1:
+        raise NotImplementedError(
+            "pallas backend implements single-level KMM2/MM2 (w <= 16); "
+            "use backend='xla' for deeper recursion")
+    h = -(-plan.w // 2)
+    a1, a0, z = _planes(a, h)
+    b1, b0, _ = _planes(b, h)
+    kernel = kmm2_gemm_planes if plan.mode is Mode.KMM2 else mm2_gemm_planes
+    core = kernel(a1, a0, b1, b0, h=h, block_m=block_m, block_n=block_n,
+                  block_k=block_k, combine_int32=exact, interpret=interpret)
+    # Zero-point adjuster (paper Section IV-D / prior work [6]).
+    abar = (a1.astype(jnp.int32) << h) + a0.astype(jnp.int32)
+    bbar = (b1.astype(jnp.int32) << h) + b0.astype(jnp.int32)
+    row = abar.sum(axis=1, keepdims=True)     # (M, 1) int32-exact
+    col = bbar.sum(axis=0, keepdims=True)     # (1, N) int32-exact
+    if exact:
+        corr = z * row + z * col + jnp.int32(z * z * kp)
+        out = core + corr
+    else:
+        corr = (z * row.astype(jnp.float32) + z * col.astype(jnp.float32)
+                + float(z) * float(z) * float(kp))
+        out = core + corr
+    return out[:m_dim, :n_dim]
+
+
+@functools.partial(jax.jit, static_argnames=("w", "m", "backend", "exact"))
+def int_gemm_jit(a: Array, b: Array, w: int, m: int = 8,
+                 backend: str = "xla", exact: bool = False) -> Array:
+    return int_gemm(a, b, w=w, m=m, backend=backend, exact=exact)
+
+
+def quantize_symmetric(x: Array, w: int, axis=None):
+    """Symmetric signed w-bit quantization. Returns (q_int32, scale_f32)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    qmax = float(2 ** (w - 1) - 1)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return q, scale.astype(jnp.float32)

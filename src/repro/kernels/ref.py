@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the GEMM kernels.
+
+``ref_int_gemm`` is the jit-able oracle (exact int32 dot within carrier
+bounds); ``ref_int_gemm_i64`` is the out-of-jit numpy int64 oracle used by the
+test suite to certify the jnp oracle itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Array = jax.Array
+
+
+def ref_int_gemm(a: Array, b: Array) -> Array:
+    """Exact int32 GEMM oracle: (M, K) @ (K, N) with int32 accumulation."""
+    return lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def ref_int_gemm_i64(a, b) -> np.ndarray:
+    """numpy int64 oracle — exact for all w <= 16 and any practical K."""
+    return np.asarray(a, dtype=np.int64) @ np.asarray(b, dtype=np.int64)
+
+
+def ref_digit_planes(x: Array, w: int):
+    """The centered s8 digit planes used by the kernels (see kmm_gemm.py).
+
+    Returns (hi, lo_centered, h, z) with x == (hi << h) + lo_centered + z
+    elementwise, hi/lo_centered both in s8 range for w <= 16.
+    """
+    h = -(-w // 2)
+    z = 1 << (h - 1)
+    xi = x.astype(jnp.int32)
+    hi = jnp.right_shift(xi, h)
+    lo = jnp.bitwise_and(xi, (1 << h) - 1) - z
+    return hi.astype(jnp.int8), lo.astype(jnp.int8), h, z
+
+
+def ref_kmm2_planes(a1: Array, a0: Array, b1: Array, b0: Array, h: int,
+                    combine_int32: bool = False) -> Array:
+    """jnp mirror of the KMM2 kernel math on digit planes (no tiling)."""
+    a1i, a0i = a1.astype(jnp.int32), a0.astype(jnp.int32)
+    b1i, b0i = b1.astype(jnp.int32), b0.astype(jnp.int32)
+    c1 = ref_int_gemm(a1i, b1i)
+    cs = ref_int_gemm(a1i + a0i, b1i + b0i)
+    c0 = ref_int_gemm(a0i, b0i)
+    if combine_int32:
+        return (c1 << (2 * h)) + ((cs - c1 - c0) << h) + c0
+    c1f, c0f = c1.astype(jnp.float32), c0.astype(jnp.float32)
+    mid = cs.astype(jnp.float32) - c1f - c0f
+    return c1f * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c0f
+
+
+def ref_mm2_planes(a1: Array, a0: Array, b1: Array, b0: Array, h: int,
+                   combine_int32: bool = False) -> Array:
+    """jnp mirror of the MM2 kernel math on digit planes (no tiling)."""
+    a1i, a0i = a1.astype(jnp.int32), a0.astype(jnp.int32)
+    b1i, b0i = b1.astype(jnp.int32), b0.astype(jnp.int32)
+    c1 = ref_int_gemm(a1i, b1i)
+    c10 = ref_int_gemm(a1i, b0i)
+    c01 = ref_int_gemm(a0i, b1i)
+    c0 = ref_int_gemm(a0i, b0i)
+    if combine_int32:
+        return (c1 << (2 * h)) + ((c10 + c01) << h) + c0
+    mid = c10.astype(jnp.float32) + c01.astype(jnp.float32)
+    return (c1.astype(jnp.float32) * (2.0 ** (2 * h)) + mid * (2.0 ** h)
+            + c0.astype(jnp.float32))

@@ -1,0 +1,44 @@
+"""Re-derive dry-run costs from saved .hlo.zst files (no recompilation).
+
+    PYTHONPATH=src python -m repro.launch.reprocess [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    import zstandard as zstd
+
+    from repro.launch.hlo_stats import parse_costs
+
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.zst")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        with open(hpath, "rb") as f:
+            hlo = zstd.ZstdDecompressor().decompress(f.read()).decode()
+        full = parse_costs(hlo)
+        rec["cost"] = {"flops": full.get("flops", 0.0),
+                       "bytes accessed": full.get("bytes", 0.0)}
+        rec["collectives"] = {k: v for k, v in full.items()
+                              if k.endswith("_bytes") or k.endswith("_count")}
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reprocessed {n} records")
+
+
+if __name__ == "__main__":
+    main()

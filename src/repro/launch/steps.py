@@ -1,0 +1,238 @@
+"""Step builders shared by the train loop, serve engine, and dry-run.
+
+``abstract_*`` helpers produce ShapeDtypeStructs (no allocation) with
+NamedShardings attached, so ``jax.jit(step).lower(**specs)`` proves the
+distribution config compiles for any (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shard
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.train import optim
+from repro.configs import ShapeCell
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Step functions.
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig):
+    """Train step with gradient-accumulation microbatching.
+
+    ``cfg.n_microbatches`` splits the global batch: peak activation memory
+    scales down by the factor while the optimizer sees the same mean
+    gradient.  k=1 short-circuits to a single fused step.
+    """
+    k = max(cfg.n_microbatches, 1)
+
+    def cast_params(params):
+        """bf16 compute copy (see ModelConfig.bf16_cast_params).  The cast is
+        elementwise on the sharded param, so downstream FSDP gathers move
+        bf16; its VJP returns f32 grads."""
+        if not cfg.bf16_cast_params:
+            return params
+
+        def leaf(path, p):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if (p.dtype == jnp.float32 and p.ndim >= 2 and p.size > 65536
+                    and name not in ("a_log", "u", "mix")):
+                return p.astype(jnp.bfloat16)
+            return p
+
+        return jax.tree_util.tree_map_with_path(leaf, params)
+
+    def loss_of(params, batch):
+        return lm.loss_fn(cast_params(params), cfg, batch)
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                mb, (gzero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+        new_params, new_state, metrics = optim.update(ocfg, grads, opt_state,
+                                                      params)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, t, mem=None):
+        logits, new_cache = lm.decode_step(params, cfg, token, cache, t,
+                                           mem=mem)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        logits, new_cache, mem = lm.prefill(
+            params, cfg, batch["tokens"], cache,
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        return logits, new_cache, mem
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct + sharding).
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, prequant: bool = False):
+    shapes = jax.eval_shape(
+        functools.partial(lm.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if prequant:
+        from repro.quant.prequant import prequantize
+
+        shapes = jax.eval_shape(lambda p: prequantize(p, cfg.quant), shapes)
+    sh = shard.param_sharding(shapes, mesh)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, sh)
+
+
+def abstract_opt_state(params_abs, mesh: Mesh):
+    def like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    mu = jax.tree.map(like, params_abs)
+    nu = jax.tree.map(like, params_abs)
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return optim.OptState(step=step, mu=mu, nu=nu)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = cell.global_batch, cell.seq_len
+    dp = shard.batch_spec(mesh)
+    bspec = dp[0] if len(dp) else None
+    txt = s - cfg.frontend_tokens if cfg.frontend == "vision" else s
+    out = {
+        "tokens": _sds((b, txt), jnp.int32, mesh, P(bspec)),
+        "labels": _sds((b, txt), jnp.int32, mesh, P(bspec)),
+        "mask": _sds((b, txt), jnp.float32, mesh, P(bspec)),
+    }
+    if cfg.frontend == "vision":
+        out["frontend_embeds"] = _sds(
+            (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32, mesh,
+            P(bspec))
+    if cfg.is_encdec:
+        out["enc_frames"] = _sds((b, s, cfg.frontend_dim), jnp.float32, mesh,
+                                 P(bspec))
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    shapes = jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, max_seq))
+    sh = shard.cache_sharding(shapes, mesh, batch=batch)
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        shapes, sh)
+
+
+def abstract_mem(cfg: ModelConfig, mesh: Mesh, params_abs, batch: int,
+                 enc_len: int):
+    """Cross-attention memory specs for enc-dec decode."""
+    if not cfg.is_encdec:
+        return None
+    ex = jax.ShapeDtypeStruct((batch, enc_len, cfg.d_model),
+                              jnp.dtype(cfg.compute_dtype))
+    shapes = jax.eval_shape(
+        lambda p, e: lm._encdec_memory(p, cfg, e), params_abs, ex)
+    dp = shard.batch_spec(mesh)
+    bspec = dp[0] if len(dp) else None
+
+    def rule(l):
+        spec = [None] * len(l.shape)
+        if len(l.shape) >= 2:
+            spec[1] = bspec
+        return jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, P(*spec)))
+
+    return jax.tree.map(rule, shapes)
+
+
+def decode_token_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    b = cell.global_batch
+    dp = shard.batch_spec(mesh)
+    bspec = dp[0] if len(dp) else None
+    if b == 1:
+        bspec = None
+    token = _sds((b,), jnp.int32, mesh, P(bspec))
+    t = jax.ShapeDtypeStruct((), jnp.int32,
+                             sharding=NamedSharding(mesh, P()))
+    return token, t
+
+
+ENC_MEM_LEN = 4096  # cross-attention memory length for enc-dec decode cells
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                ocfg: Optional[optim.AdamWConfig] = None,
+                prequant: bool = False) -> Dict[str, Any]:
+    """All abstract inputs for the cell's step function."""
+    params_abs = abstract_params(cfg, mesh,
+                                 prequant=prequant and cell.kind != "train")
+    if cell.kind == "train":
+        ocfg = ocfg or optim.AdamWConfig()
+        return {
+            "params": params_abs,
+            "opt_state": abstract_opt_state(params_abs, mesh),
+            "batch": train_batch_specs(cfg, cell, mesh),
+        }
+    if cell.kind == "prefill":
+        cache = abstract_cache(cfg, mesh, cell.global_batch, cell.seq_len)
+        return {
+            "params": params_abs,
+            "cache": cache,
+            "batch": train_batch_specs(cfg, cell, mesh),
+        }
+    # decode
+    token, t = decode_token_specs(cfg, cell, mesh)
+    out = {
+        "params": params_abs,
+        "cache": abstract_cache(cfg, mesh, cell.global_batch, cell.seq_len),
+        "token": token,
+        "t": t,
+    }
+    mem = abstract_mem(cfg, mesh, params_abs, cell.global_batch, ENC_MEM_LEN)
+    if mem is not None:
+        out["mem"] = mem
+    return out

@@ -1,0 +1,163 @@
+"""Model configuration: a layer-pattern description of every assigned arch.
+
+A model is ``n_periods`` repetitions of a ``pattern`` of blocks; parameters
+are stacked over periods and the forward pass scans over them, keeping HLO
+size O(len(pattern)) regardless of depth.  Dense transformers have a
+single-block pattern; jamba's 1:7 mamba:attention interleave (with MoE every
+other layer) is one 8-block pattern scanned 4x.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+from repro.quant.policy import QuantConfig
+
+
+@dataclass(frozen=True)
+class Block:
+    kind: str = "attn"        # "attn" | "mamba" | "rwkv"
+    moe: bool = False         # MoE MLP instead of dense MLP
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[Block, ...]
+    n_periods: int
+    act: str = "silu"                # silu | gelu | relu2
+    glu: bool = True                 # gated MLP (SwiGLU/GeGLU); False: plain
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba)
+    d_state: int = 16
+    conv_width: int = 4
+    expand: int = 2
+    # RWKV
+    rwkv_head_dim: int = 64
+    # Encoder-decoder
+    encoder_periods: int = 0         # >0 => enc-dec; encoder uses `pattern`
+    # Modality frontend stub ("none" | "vision" | "audio")
+    frontend: str = "none"
+    frontend_dim: int = 0            # embedding dim provided by the stub
+    frontend_tokens: int = 0         # prefix tokens contributed at prefill
+    # Quantized execution (the paper's KMM integer GEMM path)
+    quant: QuantConfig = QuantConfig()
+    # Numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # Training
+    remat: bool = True
+    # Gradient-accumulation microbatches for the full-size train shape:
+    # period-boundary remat residuals scale with n_periods * B/k * S * d, so
+    # deep/wide archs split the global batch to fit 16 GB/chip.
+    n_microbatches: int = 1
+    # Cast fp32 weight matrices to bf16 before use in the train step: FSDP
+    # all-gathers and TP partial-sum reductions then move bf16, halving the
+    # dominant collective bytes (§Perf).  f32 master params stay in the
+    # optimizer; gradients accumulate in f32.
+    bf16_cast_params: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.n_periods
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table rows padded to a multiple of 512 so the vocab dim
+        shards on any production mesh axis (Megatron-style vocab padding).
+        Logits beyond ``vocab_size`` are masked to -inf in the head."""
+        return -(-self.vocab_size // 512) * 512
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_periods > 0
+
+    @property
+    def attn_free(self) -> bool:
+        return all(b.kind != "attn" for b in self.pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch admits long-context (500k) execution: decode cost
+        per token must not require materializing quadratic state growth —
+        SSM/linear-recurrence or hybrid archs qualify."""
+        return any(b.kind in ("mamba", "rwkv") for b in self.pattern)
+
+    def with_quant(self, quant: QuantConfig) -> "ModelConfig":
+        return replace(self, quant=quant)
+
+    def scaled_down(self, **kw) -> "ModelConfig":
+        """Reduced config of the same family for CPU smoke tests."""
+        return replace(self, **kw)
+
+
+def dense_pattern(n_layers: int) -> Tuple[Tuple[Block, ...], int]:
+    return (Block("attn"),), n_layers
+
+
+def moe_pattern(n_layers: int) -> Tuple[Tuple[Block, ...], int]:
+    return (Block("attn", moe=True),), n_layers
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count (used by roofline MODEL_FLOPS)."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    total = v * d  # embedding
+    if not cfg.tie_embeddings:
+        total += v * d
+    for blk in cfg.pattern:
+        n = cfg.n_periods
+        if blk.kind == "attn":
+            total += n * d * (cfg.q_dim + 2 * cfg.kv_dim) + n * cfg.q_dim * d
+        elif blk.kind == "mamba":
+            di = cfg.expand * d
+            total += n * (d * 2 * di + di * cfg.conv_width
+                          + di * (cfg.d_state * 2 + 1 + d)
+                          + di * (d // 16 if d >= 16 else 1))
+        elif blk.kind == "rwkv":
+            total += n * (d * d * 5 + d * d)  # r,k,v,g,w (low-rank approx) + out
+        if blk.moe:
+            fe = cfg.d_ff_expert or ff
+            mults = 3 if cfg.glu else 2
+            total += n * (cfg.n_experts * mults * d * fe + d * cfg.n_experts)
+        else:
+            mults = 3 if cfg.glu else 2
+            total += n * mults * d * ff
+    if cfg.encoder_periods:
+        # encoder stack mirrors the pattern with encoder_periods repeats
+        total += int(total * cfg.encoder_periods / max(cfg.n_periods, 1) * 0.5)
+    return int(total)
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active (per-token) parameters — MoE counts only top_k experts."""
+    if not cfg.n_experts:
+        return count_params(cfg)
+    full = count_params(cfg)
+    fe = cfg.d_ff_expert or cfg.d_ff
+    mults = 3 if cfg.glu else 2
+    moe_blocks = sum(1 for b in cfg.pattern if b.moe) * cfg.n_periods
+    all_experts = moe_blocks * cfg.n_experts * mults * cfg.d_model * fe
+    active_experts = moe_blocks * cfg.top_k * mults * cfg.d_model * fe
+    return int(full - all_experts + active_experts)

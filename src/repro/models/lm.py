@@ -1,0 +1,471 @@
+"""Model assembly: layer-pattern scan, embeddings, heads, caches.
+
+Decoder-only LMs (dense / MoE / hybrid / ssm / vlm) and encoder-decoder
+(audio) models share the same period-scanned block machinery:
+
+  * ``init_params``     — parameters, block params stacked over periods.
+  * ``forward_train``   — full-sequence forward -> logits (+ MoE aux loss).
+  * ``loss_fn``         — next-token cross-entropy.
+  * ``init_cache`` / ``prefill`` / ``decode_step`` — serving path.
+
+Every matmul site is named so the quantized KMM policy can assign per-layer
+bitwidths (paper's precision-scalable use-case).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain_batch_dim
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv as R
+from repro.models import ssm as S
+from repro.models.config import Block, ModelConfig
+from repro.quant.qmatmul import maybe_quantized_matmul
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+AUX_COEF = 0.01
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, spec: Block, cross_attn: bool,
+                dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": L.norm_init(cfg.d_model), "ln2": L.norm_init(cfg.d_model)}
+    if spec.kind == "attn":
+        p["attn"] = L.attn_init(ks[0], cfg, dtype)
+    elif spec.kind == "mamba":
+        p["mamba"] = S.mamba_init(ks[0], cfg, dtype)
+    elif spec.kind == "rwkv":
+        p["rwkv"] = R.rwkv_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(spec.kind)
+    if cross_attn:
+        p["lnx"] = L.norm_init(cfg.d_model)
+        p["xattn"] = L.attn_init(ks[1], cfg, dtype)
+    if spec.moe:
+        p["moe"] = M.moe_init(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.glu, dtype)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, n_periods: int, cross_attn: bool,
+                dtype) -> Params:
+    """Blocks stacked over periods: {posN: pytree with leading n_periods}."""
+    out: Params = {}
+    for pos, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos), n_periods)
+        out[f"pos{pos}"] = jax.vmap(
+            lambda k: _block_init(k, cfg, spec, cross_attn, dtype))(keys)
+    return out
+
+
+def init_params(key: Array, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg)
+    k_emb, k_blocks, k_enc, k_head, k_front = jax.random.split(key, 5)
+    params: Params = {
+        "embed": (jax.random.normal(k_emb, (cfg.padded_vocab, cfg.d_model))
+                  * cfg.d_model**-0.5).astype(dtype),
+        "blocks": _stack_init(k_blocks, cfg, cfg.n_periods,
+                              cross_attn=cfg.is_encdec, dtype=dtype),
+        "ln_f": L.norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.padded_vocab))
+            * cfg.d_model**-0.5).astype(dtype)
+    if cfg.is_encdec:
+        params["encoder"] = _stack_init(k_enc, cfg, cfg.encoder_periods,
+                                        cross_attn=False, dtype=dtype)
+        params["enc_ln_f"] = L.norm_init(cfg.d_model)
+    if cfg.frontend != "none":
+        fd = cfg.frontend_dim
+        kf1, kf2 = jax.random.split(k_front)
+        params["frontend"] = {
+            "w1": (jax.random.normal(kf1, (fd, cfg.d_model)) * fd**-0.5
+                   ).astype(dtype),
+            "w2": (jax.random.normal(kf2, (cfg.d_model, cfg.d_model))
+                   * cfg.d_model**-0.5).astype(dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+
+def _block_train(p: Params, x: Array, spec: Block, cfg: ModelConfig, pos: int,
+                 mem: Optional[Tuple[Array, Array]] = None,
+                 causal: bool = True) -> Tuple[Array, Array]:
+    quant = cfg.quant
+    name = f"blk{pos}.{spec.kind}"
+    h = L.norm_apply(p["ln1"], x)
+    if spec.kind == "attn":
+        if causal:
+            y = L.attn_train(p["attn"], h, cfg, quant, name)
+        else:
+            y = _attn_bidir(p["attn"], h, cfg, quant, name)
+    elif spec.kind == "mamba":
+        y = S.mamba_apply(p["mamba"], h, cfg, quant, name)
+    else:
+        y = R.rwkv_apply(p["rwkv"], h, cfg, quant, name)
+    x = x + y
+    if mem is not None:
+        h = L.norm_apply(p["lnx"], x)
+        x = x + L.xattn_apply(p["xattn"], h, mem[0], mem[1], cfg, quant,
+                              f"blk{pos}.xattn")
+    h = L.norm_apply(p["ln2"], x)
+    if spec.moe:
+        y, aux = M.moe_apply(p["moe"], h, cfg, quant, f"blk{pos}.moe")
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg.act, cfg.glu, quant, f"blk{pos}.mlp")
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _attn_bidir(p, x, cfg, quant, name):
+    """Encoder (non-causal) attention."""
+    b, s, _ = x.shape
+    q, k, v = L._qkv(p, x, cfg, quant, name)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+    out = L.chunked_attention(q, k, v, causal=False)
+    out = out.reshape(b, s, cfg.q_dim)
+    return maybe_quantized_matmul(out, p["wo"], quant, f"{name}.wo")
+
+
+def _scan_blocks(params_stack: Params, x: Array, cfg: ModelConfig,
+                 mem: Optional[Params] = None,
+                 causal: bool = True) -> Tuple[Array, Array]:
+    """Scan the period-stacked blocks; returns (x, aux_loss_sum).
+
+    ``mem`` (cross-attention K/V, enc-dec only) is period-stacked like the
+    params and scanned alongside them.
+    """
+
+    def period(carry, xs):
+        period_params, period_mem = xs
+        x, aux = carry
+        x = constrain_batch_dim(x)   # keep activations DP-sharded (FSDP mode)
+        for pos, spec in enumerate(cfg.pattern):
+            m = None if period_mem is None else period_mem[f"pos{pos}"]
+            x, a = _block_train(period_params[f"pos{pos}"], x, spec, cfg, pos,
+                                mem=m, causal=causal)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(period) if cfg.remat else period
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           (params_stack, mem))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / frontend.
+# ---------------------------------------------------------------------------
+
+
+def _embed(params: Params, cfg: ModelConfig, tokens: Array) -> Array:
+    x = params["embed"][tokens].astype(_cdtype(cfg))
+    return x * jnp.asarray(cfg.d_model**0.5, _cdtype(cfg))
+
+
+def _frontend_project(params: Params, cfg: ModelConfig, embeds: Array) -> Array:
+    f = params["frontend"]
+    h = maybe_quantized_matmul(embeds.astype(_cdtype(cfg)), f["w1"],
+                               cfg.quant, "frontend.w1")
+    h = jax.nn.gelu(h)
+    return maybe_quantized_matmul(h, f["w2"], cfg.quant, "frontend.w2")
+
+
+def _logits(params: Params, cfg: ModelConfig, x: Array) -> Array:
+    x = L.norm_apply(params["ln_f"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    out = maybe_quantized_matmul(x, w, cfg.quant, "lm_head")
+    return _mask_padded_vocab(cfg, out)
+
+
+def _mask_padded_vocab(cfg: ModelConfig, logits: Array) -> Array:
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    iota = jnp.arange(cfg.padded_vocab, dtype=jnp.int32)
+    return jnp.where(iota < cfg.vocab_size, logits,
+                     jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Train path.
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: Array,
+                   frontend_embeds: Optional[Array] = None,
+                   enc_frames: Optional[Array] = None) -> Tuple[Array, Array]:
+    """tokens: (B, S_txt). Returns (final hidden (B, S, d), aux_loss)."""
+    x = constrain_batch_dim(_embed(params, cfg, tokens))
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fx = _frontend_project(params, cfg, frontend_embeds)
+        x = constrain_batch_dim(jnp.concatenate([fx.astype(x.dtype), x],
+                                                axis=1))
+    mem = None
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.is_encdec:
+        assert enc_frames is not None
+        ex = _frontend_project(params, cfg, enc_frames) \
+            if cfg.frontend == "audio" else enc_frames.astype(_cdtype(cfg))
+        ex, aux_e = _scan_blocks(params["encoder"], ex, cfg, causal=False)
+        ex = L.norm_apply(params["enc_ln_f"], ex)
+        aux_total = aux_total + aux_e
+        # Each decoder block projects its own cross-attn K/V from ex.
+        mem = _encdec_memory(params, cfg, ex)
+    x, aux = _scan_blocks(params["blocks"], x, cfg, mem=mem, causal=True)
+    return x, aux_total + aux
+
+
+def forward_train(params: Params, cfg: ModelConfig, tokens: Array,
+                  frontend_embeds: Optional[Array] = None,
+                  enc_frames: Optional[Array] = None) -> Tuple[Array, Array]:
+    """tokens: (B, S_txt). Returns (logits (B, S, V), aux_loss)."""
+    x, aux = forward_hidden(params, cfg, tokens,
+                            frontend_embeds=frontend_embeds,
+                            enc_frames=enc_frames)
+    return _logits(params, cfg, x), aux
+
+
+def _encdec_memory(params: Params, cfg: ModelConfig, ex: Array):
+    """Precompute per-(period, pos) cross-attn K/V from the encoder output.
+
+    Returns pytree with leading n_periods dims matching the block scan; the
+    scan body slices its period's K/V (the standard T5-style cache).
+    """
+    def per_pos(pos):
+        stack = params["blocks"][f"pos{pos}"]["xattn"]
+        def one(pp):
+            return L.xattn_mem(pp, ex, cfg, cfg.quant, f"blk{pos}.xattn")
+        return jax.vmap(one)(stack)   # (n_periods, B, T, K, D) x2
+    return {f"pos{pos}": per_pos(pos) for pos in range(len(cfg.pattern))}
+
+
+LOSS_CHUNK = 512
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    """Next-token CE with a sequence-chunked, recomputing head.
+
+    The (B, S, V) logits tensor is never materialized: the head matmul and
+    the CE reduce run per sequence chunk under jax.checkpoint, so peak loss
+    memory is (B, chunk, V/TP) and the backward recomputes each chunk's
+    logits.  The gold logit is extracted with an iota==label select (not
+    take_along_axis) so the vocab dim stays TP-sharded throughout.
+    """
+    x, aux = forward_hidden(
+        params, cfg, batch["tokens"],
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:        # vision prefix tokens: strip
+        x = x[:, -labels.shape[1]:, :]
+    x = L.norm_apply(params["ln_f"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    v = cfg.vocab_size
+
+    b, s, _ = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    @jax.checkpoint
+    def chunk_ce(xc, lc, mc):
+        logits = maybe_quantized_matmul(xc, w, cfg.quant, "lm_head")
+        logits = _mask_padded_vocab(cfg, logits).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        iota = jnp.arange(cfg.padded_vocab, dtype=lc.dtype)[None, None, :]
+        gold = jnp.sum(jnp.where(iota == lc[..., None], logits, 0.0), axis=-1)
+        return ((logz - gold) * mc).sum()
+
+    def body(tot, idx):
+        sl = lambda t: lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        return tot + chunk_ce(sl(x), sl(labels), sl(mask)), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    ce = total / jnp.maximum(mask.sum(), 1.0)
+    return ce + AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# Serve path: cache init / prefill / decode.
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    dtype = _cdtype(cfg)
+    cache: Params = {}
+    for pos, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            c = L.attn_cache_init(cfg, batch, max_seq, dtype)
+        elif spec.kind == "mamba":
+            c = S.mamba_cache_init(cfg, batch, dtype)
+        else:
+            c = R.rwkv_cache_init(cfg, batch, dtype)
+        cache[f"pos{pos}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), c)
+    return cache
+
+
+def _block_decode(p: Params, x: Array, spec: Block, cache: Params, pos_idx: int,
+                  t: Array, cfg: ModelConfig,
+                  mem: Optional[Tuple[Array, Array]] = None):
+    quant = cfg.quant
+    name = f"blk{pos_idx}.{spec.kind}"
+    h = L.norm_apply(p["ln1"], x)
+    if spec.kind == "attn":
+        y, new_c = L.attn_decode(p["attn"], h, cache, t, cfg, quant, name)
+    elif spec.kind == "mamba":
+        y, new_c = S.mamba_decode(p["mamba"], h, cache, cfg, quant, name)
+    else:
+        y, new_c = R.rwkv_decode(p["rwkv"], h, cache, cfg, quant, name)
+    x = x + y
+    if mem is not None:
+        h = L.norm_apply(p["lnx"], x)
+        x = x + L.xattn_apply(p["xattn"], h, mem[0], mem[1], cfg, quant,
+                              f"blk{pos_idx}.xattn")
+    h = L.norm_apply(p["ln2"], x)
+    if spec.moe:
+        y, _ = M.moe_apply(p["moe"], h, cfg, quant, f"blk{pos_idx}.moe")
+    else:
+        y = L.mlp_apply(p["mlp"], h, cfg.act, cfg.glu, quant,
+                        f"blk{pos_idx}.mlp")
+    return x + y, new_c
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: Array, cache: Params,
+                t: Array, mem: Optional[Params] = None) -> Tuple[Array, Params]:
+    """One decode step. token: (B,) int32; t: scalar position; returns
+    (logits (B, V), new cache)."""
+    x = _embed(params, cfg, token[:, None])
+
+    def period(x, xs):
+        period_params, period_cache, period_mem = xs
+        new_cache = {}
+        for pos, spec in enumerate(cfg.pattern):
+            m = None
+            if period_mem is not None:
+                m = period_mem[f"pos{pos}"]
+            x, nc = _block_decode(period_params[f"pos{pos}"], x, spec,
+                                  period_cache[f"pos{pos}"], pos, t, cfg, mem=m)
+            new_cache[f"pos{pos}"] = nc
+        return x, new_cache
+
+    xs = (params["blocks"], cache, mem)
+    x, new_cache = lax.scan(period, x, xs)
+    logits = _logits(params, cfg, x)
+    return logits[:, 0, :], new_cache
+
+
+PREFILL_CHUNK = 2048
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
+            frontend_embeds: Optional[Array] = None,
+            enc_frames: Optional[Array] = None,
+            chunk_size: int = PREFILL_CHUNK):
+    """Chunked prefill: the prompt runs through the model ``chunk_size``
+    tokens at a time (vLLM/Sarathi-style), so peak activation memory is
+    O(chunk * d) regardless of prompt length; attention/recurrent state
+    carries across chunks through the cache.
+
+    Returns (last-position logits (B, V), cache, mem) where mem is the
+    cross-attention memory for enc-dec models (None otherwise).
+    """
+    x = constrain_batch_dim(_embed(params, cfg, tokens))
+    if cfg.frontend == "vision" and frontend_embeds is not None:
+        fx = _frontend_project(params, cfg, frontend_embeds)
+        x = constrain_batch_dim(jnp.concatenate([fx.astype(x.dtype), x],
+                                                axis=1))
+    mem = None
+    if cfg.is_encdec:
+        ex = _frontend_project(params, cfg, enc_frames) \
+            if cfg.frontend == "audio" else enc_frames.astype(_cdtype(cfg))
+        ex, _ = _scan_blocks(params["encoder"], ex, cfg, causal=False)
+        ex = L.norm_apply(params["enc_ln_f"], ex)
+        mem = _encdec_memory(params, cfg, ex)
+
+    b, s, _ = x.shape
+    cs = min(chunk_size, s)
+    while s % cs:
+        cs //= 2
+    n_chunks = s // cs
+
+    def period(carry, xs):
+        xc, offset = carry
+        period_params, period_cache, period_mem = xs
+        new_cache = {}
+        for pos, spec in enumerate(cfg.pattern):
+            p = period_params[f"pos{pos}"]
+            quant = cfg.quant
+            name = f"blk{pos}.{spec.kind}"
+            h = L.norm_apply(p["ln1"], xc)
+            if spec.kind == "attn":
+                y, nc = L.attn_prefill_chunk(
+                    p["attn"], h, period_cache[f"pos{pos}"], offset, cfg,
+                    quant, name)
+            elif spec.kind == "mamba":
+                y, nc = S.mamba_apply_stateful(
+                    p["mamba"], h, period_cache[f"pos{pos}"], cfg, quant, name)
+            else:
+                y, nc = R.rwkv_apply_stateful(
+                    p["rwkv"], h, period_cache[f"pos{pos}"], cfg, quant, name)
+            xc = xc + y
+            if period_mem is not None:
+                hm = L.norm_apply(p["lnx"], xc)
+                pm = period_mem[f"pos{pos}"]
+                xc = xc + L.xattn_apply(p["xattn"], hm, pm[0], pm[1], cfg,
+                                        quant, f"blk{pos}.xattn")
+            h = L.norm_apply(p["ln2"], xc)
+            if spec.moe:
+                y, _ = M.moe_apply(p["moe"], h, cfg, quant, f"blk{pos}.moe")
+            else:
+                y = L.mlp_apply(p["mlp"], h, cfg.act, cfg.glu, quant,
+                                f"blk{pos}.mlp")
+            xc = xc + y
+            new_cache[f"pos{pos}"] = nc
+        return (xc, offset), new_cache
+
+    def chunk_step(cache, ci):
+        offset = ci * cs
+        xc = lax.dynamic_slice_in_dim(x, offset, cs, axis=1)
+        (xc, _), new_cache = lax.scan(period, (xc, offset),
+                                      (params["blocks"], cache, mem))
+        return new_cache, xc[:, -1]
+
+    cache, lasts = lax.scan(chunk_step, cache,
+                            jnp.arange(n_chunks, dtype=jnp.int32))
+    logits = _logits(params, cfg, lasts[-1][:, None, :])
+    return logits[:, 0, :], cache, mem

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer with per-sequence sort-based capacity dispatch.
+
+Routing, gather and combine are vmapped over the batch dimension, so under
+pjit every dispatch step is *local to the data shard* (no global argsort or
+cross-device gathers); only the expert GEMM itself crosses shards — expert
+weights are sharded over the 'model' axis (expert parallelism) and XLA
+inserts the EP all-to-all when it resharded the (E, B*C, d) buffer.
+
+Capacity is per sequence (C = S*top_k*factor/E, floor 8, rounded to 8);
+overflow drops ride the residual.  Expert GEMMs run through the quantized
+KMM path (`quantized_matmul_batched`) like every other matmul.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qmatmul import maybe_quantized_batched, maybe_quantized_matmul
+from repro.models.layers import _act
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def moe_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    fe = cfg.d_ff_expert or cfg.d_ff
+    e = cfg.n_experts
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    s_in, s_out = d**-0.5, fe**-0.5
+    p = {
+        "router": (jax.random.normal(kr, (d, e)) * s_in).astype(jnp.float32),
+        "wi": (jax.random.normal(k1, (e, d, fe)) * s_in).astype(dtype),
+        "wo": (jax.random.normal(k3, (e, fe, d)) * s_out).astype(dtype),
+    }
+    if cfg.glu:
+        p["wg"] = (jax.random.normal(k2, (e, d, fe)) * s_in).astype(dtype)
+    return p
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(tokens * top_k * factor / n_experts)
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_apply(p: Params, x: Array, cfg, quant, name: str) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, k, e, cfg.capacity_factor)
+
+    logits = maybe_quantized_matmul(
+        x.astype(jnp.float32), p["router"], quant, f"{name}.router")
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (B, S, E)
+
+    def dispatch_one(xf, pr):
+        """xf: (S, d); pr: (S, E) -> buf (E, C, d) + combine aux."""
+        gate_vals, expert_ids = jax.lax.top_k(pr, k)              # (S, k)
+        gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                         1e-9)
+        flat_e = expert_ids.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+        flat_g = gate_vals.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se = flat_e[order]
+        st = flat_t[order]
+        sg = flat_g[order]
+        group_start = jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32))
+        rank = jnp.arange(s * k, dtype=jnp.int32) - group_start[se]
+        keep = rank < cap
+        slot = jnp.where(keep, se * cap + rank, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].set(xf[st])
+        return buf[:-1].reshape(e, cap, d), (slot, st, sg, keep, expert_ids)
+
+    buf, aux_info = jax.vmap(dispatch_one)(x, probs)              # (B,E,C,d)
+
+    # Expert GEMMs: fold batch into capacity so EP sees one (E, B*C, d) GEMM.
+    xe = jnp.moveaxis(buf, 0, 1).reshape(e, b * cap, d)
+    up = maybe_quantized_batched(xe, p["wi"], quant, f"{name}.wi")
+    if cfg.glu:
+        gate = maybe_quantized_batched(xe, p["wg"], quant, f"{name}.wg")
+        h = _act(gate, cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    out_e = maybe_quantized_batched(h, p["wo"], quant, f"{name}.wo")
+    out_e = jnp.moveaxis(out_e.reshape(e, b, cap, d), 1, 0)       # (B,E,C,d)
+
+    def combine_one(oe, aux):
+        slot, st, sg, keep, _ = aux
+        flat = oe.reshape(e * cap, d)
+        gathered = jnp.where(keep[:, None],
+                             flat[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+        contrib = gathered * sg[:, None].astype(oe.dtype)
+        return jnp.zeros((s, d), oe.dtype).at[st].add(contrib)
+
+    out = jax.vmap(combine_one)(out_e, aux_info)
+
+    # Switch-style load-balance aux loss (batch-mean).
+    me = probs.mean(axis=(0, 1))                                   # (E,)
+    counts = jax.nn.one_hot(aux_info[4], e, dtype=jnp.float32)     # (B,S,k,E)
+    ce = counts.mean(axis=(0, 1, 2))
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,175 @@
+"""Mamba (selective SSM) block — jamba's recurrent layer.
+
+Hardware/algorithm note (DESIGN.md §5): the selective-scan recurrence
+``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t`` has data-dependent diagonal decay
+and is computed in fp32 — it is not an integer GEMM, so the paper's KMM does
+not apply to it; the block's projections (in/out/x/dt) do ride the quantized
+KMM path.  Prefill uses a chunked associative scan (O(chunk * d_inner *
+d_state) peak memory); decode is a single-step state update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.quant.qmatmul import maybe_quantized_matmul
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, -(-d_model // 16))
+
+
+def mamba_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di = cfg.expand * d
+    ds, cw = cfg.d_state, cfg.conv_width
+    dtr = _dt_rank(d)
+    keys = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(keys[1], (cw, di)) * cw**-0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(keys[2], (di, dtr + 2 * ds)) * di**-0.5
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(keys[3], (dtr, di)) * dtr**-0.5
+                    ).astype(dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(keys[4], (di, d)) * di**-0.5
+                     ).astype(dtype),
+    }
+
+
+def _ssm_inputs(p: Params, x: Array, cfg, quant, name: str,
+                conv_tail: Optional[Array] = None):
+    """Projections + causal depthwise conv; returns (x_conv, z, delta, B, C).
+
+    ``conv_tail``: the previous chunk's last conv_width-1 pre-conv inputs
+    (zeros at sequence start)."""
+    di = cfg.expand * cfg.d_model
+    ds = cfg.d_state
+    dtr = _dt_rank(cfg.d_model)
+    xz = maybe_quantized_matmul(x, p["in_proj"], quant, f"{name}.in_proj")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if conv_tail is None:
+        x_pad = jnp.pad(x_in, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([conv_tail.astype(x_in.dtype), x_in], axis=1)
+    x_conv = _causal_conv(x_pad, p["conv_w"], p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    x_dbl = maybe_quantized_matmul(x_conv, p["x_proj"], quant, f"{name}.x_proj")
+    dt_r, b_mat, c_mat = jnp.split(x_dbl, [dtr, dtr + ds], axis=-1)
+    delta = maybe_quantized_matmul(dt_r, p["dt_proj"], quant, f"{name}.dt_proj")
+    delta = jax.nn.softplus(delta.astype(jnp.float32) + p["dt_bias"])
+    return x_conv, z, delta, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _causal_conv(x_padded: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal 1D conv; x_padded (B, S + cw - 1, di), w (cw, di)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x_padded[:, cw - 1:, :])
+    for i in range(cw):
+        tap = x_padded[:, i:i + out.shape[1], :]
+        out = out + tap * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
+                         quant, name: str, chunk: int = 128
+                         ) -> Tuple[Array, Params]:
+    """Sequence forward from a carried (conv, ssm) state; returns the state
+    after the last position (chunked-prefill building block)."""
+    b, s, _ = x.shape
+    di, ds = cfg.expand * cfg.d_model, cfg.d_state
+    if cache is None:
+        cache = mamba_cache_init(cfg, b, x.dtype)
+    x_conv, z, delta, b_mat, c_mat = _ssm_inputs(
+        p, x, cfg, quant, name, conv_tail=cache["conv"])
+    a = -jnp.exp(p["a_log"])                                 # (di, ds)
+    x_f = x_conv.astype(jnp.float32)
+
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    @jax.checkpoint   # recompute dA/dBx per chunk in bwd
+    def per_chunk(h0, idx):
+        sl = lambda t: lax.dynamic_slice_in_dim(t, idx * chunk, chunk, axis=1)
+        d_c, b_c, c_c, x_c = sl(delta), sl(b_mat), sl(c_mat), sl(x_f)
+        da = jnp.exp(d_c[..., None] * a[None, None])          # (B,c,di,ds)
+        dbx = (d_c * x_c)[..., None] * b_c[:, :, None, :]     # (B,c,di,ds)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        aprod, bsum = lax.associative_scan(combine, (da, dbx), axis=1)
+        h_all = aprod * h0[:, None] + bsum                    # (B,c,di,ds)
+        y_c = jnp.einsum("bcds,bcs->bcd", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    hT, y = lax.scan(per_chunk, cache["ssm"], jnp.arange(nc))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, di)
+    y = y + x_f * p["d_skip"][None, None, :]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = maybe_quantized_matmul(y, p["out_proj"], quant, f"{name}.out_proj")
+    # conv tail for the next chunk: last cw-1 pre-conv inputs
+    xz = maybe_quantized_matmul(x[:, -(cfg.conv_width - 1):, :], p["in_proj"],
+                                quant, f"{name}.in_proj")
+    tail = jnp.split(xz, 2, axis=-1)[0].astype(cache["conv"].dtype)
+    return out, {"conv": tail, "ssm": hT}
+
+
+def mamba_apply(p: Params, x: Array, cfg, quant, name: str,
+                chunk: int = 128) -> Array:
+    """Full-sequence (train) forward via chunked associative scan."""
+    out, _ = mamba_apply_stateful(p, x, None, cfg, quant, name, chunk=chunk)
+    return out
+
+
+def mamba_cache_init(cfg, batch: int, dtype) -> Params:
+    di = cfg.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, x: Array, cache: Params, cfg, quant,
+                 name: str) -> Tuple[Array, Params]:
+    """Single-token step: x (B, 1, d)."""
+    b = x.shape[0]
+    di, ds = cfg.expand * cfg.d_model, cfg.d_state
+    xz = maybe_quantized_matmul(x, p["in_proj"], quant, f"{name}.in_proj")
+    x_in, z = jnp.split(xz, 2, axis=-1)                       # (B,1,di)
+    window = jnp.concatenate([cache["conv"], x_in.astype(cache["conv"].dtype)],
+                             axis=1)                          # (B,cw,di)
+    x_conv = (window * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    x_conv = jax.nn.silu(x_conv + p["conv_b"][None, None, :])
+    dtr = _dt_rank(cfg.d_model)
+    x_dbl = maybe_quantized_matmul(x_conv, p["x_proj"], quant, f"{name}.x_proj")
+    dt_r, b_mat, c_mat = jnp.split(x_dbl, [dtr, dtr + ds], axis=-1)
+    delta = maybe_quantized_matmul(dt_r, p["dt_proj"], quant, f"{name}.dt_proj")
+    delta = jax.nn.softplus(delta.astype(jnp.float32) + p["dt_bias"])  # (B,1,di)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta[..., None] * a[None, None])            # (B,1,di,ds)
+    dbx = (delta * x_conv.astype(jnp.float32))[..., None] * \
+        b_mat.astype(jnp.float32)[:, :, None, :]
+    h = cache["ssm"] * da[:, 0] + dbx[:, 0]                   # (B,di,ds)
+    y = jnp.einsum("bds,bs->bd", h, c_mat.astype(jnp.float32)[:, 0])
+    y = y + x_conv.astype(jnp.float32)[:, 0] * p["d_skip"][None, :]
+    y = (y * jax.nn.silu(z.astype(jnp.float32)[:, 0]))[:, None, :]
+    out = maybe_quantized_matmul(y.astype(x.dtype), p["out_proj"], quant,
+                                 f"{name}.out_proj")
+    return out, {"conv": window[:, 1:], "ssm": h}

@@ -1,0 +1,7 @@
+from repro.quant.policy import PrecisionPolicy, QuantConfig
+from repro.quant.qmatmul import quantized_matmul, quantized_matmul_batched
+
+__all__ = [
+    "PrecisionPolicy", "QuantConfig",
+    "quantized_matmul", "quantized_matmul_batched",
+]

@@ -1,0 +1,67 @@
+"""Per-layer precision policy — the precision-scalable use-case (paper §II-E).
+
+Neural networks tolerate low bitwidths for most layers but need wider ones for
+a sensitive subset; a fixed-width accelerator must over-provision.  The
+paper's precision-scalable KMM architecture executes each width in its best
+mode (MM1 / KMM2 / MM2); this module is the model-level counterpart: a policy
+assigns a bitwidth to every named matmul site, and the dispatch rule turns
+that width into an execution mode.
+"""
+from __future__ import annotations
+
+import fnmatch
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.dispatch import Plan, select_mode
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Quantized-execution configuration attached to a model config."""
+
+    enabled: bool = False
+    default_bits: int = 8
+    m: int = 8                      # multiplier (MXU operand) bitwidth
+    backend: str = "xla"            # "xla" | "pallas"
+    # "auto" follows the paper's dispatch rule; "mm2" forces the conventional
+    # 4-product digit decomposition (the baseline KMM is measured against).
+    force_mode: str = "auto"
+    # fnmatch patterns on layer names -> bitwidth overrides, e.g.
+    # {"*.lm_head": 12, "*.attn.o_proj": 12}
+    overrides: Tuple[Tuple[str, int], ...] = ()
+
+    def bits_for(self, name: str) -> int:
+        for pattern, bits in self.overrides:
+            if fnmatch.fnmatch(name, pattern):
+                return bits
+        return self.default_bits
+
+    def plan_for(self, name: str) -> Plan:
+        return select_mode(self.bits_for(name), self.m)
+
+
+# Ready-made policies used by configs and experiments.
+POLICY_W8 = QuantConfig(enabled=True, default_bits=8)
+# The paper's headline regime: bitwidths 9-14 ride the KMM2 mode (4/3 roof).
+POLICY_W12 = QuantConfig(enabled=True, default_bits=12)
+POLICY_MIXED = QuantConfig(
+    enabled=True, default_bits=8,
+    overrides=(("*lm_head", 12), ("*o_proj", 12), ("*router", 12)),
+)
+POLICY_W16 = QuantConfig(enabled=True, default_bits=16)
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    """Workload-level summary: which fraction of GEMM work runs in each mode
+    (used by benchmarks to model Table I/II mixed-width rows)."""
+
+    bits_fractions: Tuple[Tuple[int, float], ...]  # (bits, fraction of mults)
+
+    def mode_fractions(self, m: int = 8) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for bits, frac in self.bits_fractions:
+            mode = select_mode(bits, m).mode.value
+            out[mode] = out.get(mode, 0.0) + frac
+        return out

@@ -1,0 +1,144 @@
+"""Quantized matmul with KMM integer GEMM core and straight-through gradients.
+
+Forward: dynamic per-token activation quantization x per-channel weight
+quantization to ``w`` bits -> integer GEMM through the precision-scalable
+dispatch (MM1 / KMM2 / MM2; Karatsuba digit planes for 9-14 bits) -> dequant.
+Backward: straight-through estimator — gradients flow as if the matmul were
+full precision (standard integer quantized-training practice; the paper's
+architectures are inference-side so STE only affects our training drivers).
+
+Two entry points: ``quantized_matmul`` for (..., K) @ (K, N) dense layers and
+``quantized_matmul_batched`` for (E, C, K) @ (E, K, N) expert GEMMs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import Mode, select_mode
+from repro.core.kmm import kmm_n, mm_n
+
+Array = jax.Array
+
+
+def _quantize(x: Array, w: int, axis) -> Tuple[Array, Array]:
+    """Symmetric signed w-bit quantization along ``axis`` (None = per-tensor)."""
+    qmax = float(2 ** (w - 1) - 1)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = (jnp.maximum(amax, 1e-8) / qmax).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def _int_dot(qx: Array, qw: Array, w: int, m: int, dims,
+             force_mode: str = "auto") -> Array:
+    """Integer GEMM on quantized values via the dispatched mode, fp32 out."""
+    plan = select_mode(w, m)
+    mode = plan.mode
+    if force_mode == "mm2" and w > m:
+        mode = Mode.MM2
+    if mode is Mode.MM1:
+        out = jax.lax.dot_general(qx, qw, dims,
+                                  preferred_element_type=jnp.int32)
+        return out.astype(jnp.float32)
+    fn = kmm_n if mode is Mode.KMM2 else mm_n
+    return fn(qx, qw, w=plan.w, n=max(plan.digits, 2), dimension_numbers=dims,
+              combine_dtype=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def quantized_matmul(x: Array, wmat: Array, w_bits: int, m: int = 8,
+                     force_mode: str = "auto") -> Array:
+    """(..., K) @ (K, N) quantized to ``w_bits``; returns x.dtype."""
+    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode)
+
+
+def _qmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto"):
+    qx, sx = _quantize(x, w_bits, axis=-1)            # per-token
+    qw, sw = _quantize(wmat, w_bits, axis=0)          # per-out-channel
+    dims = (((x.ndim - 1,), (0,)), ((), ()))
+    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
+    return (acc * (sx * sw)).astype(x.dtype)
+
+
+def _qmm_fwd(x, wmat, w_bits, m, force_mode="auto"):
+    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode), (x, wmat)
+
+
+def _qmm_bwd(w_bits, m, force_mode, res, g):
+    x, wmat = res
+    gf = g.astype(jnp.float32)
+    dx = jnp.einsum("...n,kn->...k", gf, wmat.astype(jnp.float32))
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    g2 = gf.reshape(-1, gf.shape[-1])
+    dw = x2.T @ g2
+    return dx.astype(x.dtype), dw.astype(wmat.dtype)
+
+
+quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def quantized_matmul_batched(x: Array, wmat: Array, w_bits: int,
+                             m: int = 8, force_mode: str = "auto") -> Array:
+    """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``."""
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode)
+
+
+def _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto"):
+    qx, sx = _quantize(x, w_bits, axis=-1)            # per (expert, row)
+    qw, sw = _quantize(wmat, w_bits, axis=1)          # per (expert, channel)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
+    return (acc * (sx * sw)).astype(x.dtype)
+
+
+def _qbmm_fwd(x, wmat, w_bits, m, force_mode="auto"):
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode), (x, wmat)
+
+
+def _qbmm_bwd(w_bits, m, force_mode, res, g):
+    x, wmat = res
+    gf = g.astype(jnp.float32)
+    dx = jnp.einsum("ecn,ekn->eck", gf, wmat.astype(jnp.float32))
+    dw = jnp.einsum("eck,ecn->ekn", x.astype(jnp.float32), gf)
+    return dx.astype(x.dtype), dw.astype(wmat.dtype)
+
+
+quantized_matmul_batched.defvjp(_qbmm_fwd, _qbmm_bwd)
+
+
+def prequant_matmul(x: Array, wrec, w_bits: int, m: int = 8,
+                    force_mode: str = "auto", batched: bool = False) -> Array:
+    """Serving path on pre-quantized weights ({"q", "scale"} records): skips
+    the runtime weight quantization (see quant/prequant.py).  Inference-only
+    (not differentiable)."""
+    qx, sx = _quantize(x, w_bits, axis=-1)
+    qw = wrec["q"].astype(jnp.int32)
+    dims = (((2,), (1,)), ((0,), (0,))) if batched         else (((x.ndim - 1,), (0,)), ((), ()))
+    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
+    return (acc * (sx * wrec["scale"])).astype(x.dtype)
+
+
+def maybe_quantized_matmul(x: Array, wmat: Array, quant, name: str) -> Array:
+    """Dense matmul that routes through the quantized KMM path when enabled."""
+    if isinstance(wmat, dict):
+        return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
+                               quant.force_mode)
+    if quant is not None and quant.enabled:
+        return quantized_matmul(x, wmat, quant.bits_for(name), quant.m,
+                                quant.force_mode)
+    return jnp.einsum("...k,kn->...n", x, wmat.astype(x.dtype))
+
+
+def maybe_quantized_batched(x: Array, wmat: Array, quant, name: str) -> Array:
+    if isinstance(wmat, dict):
+        return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
+                               quant.force_mode, batched=True)
+    if quant is not None and quant.enabled:
+        return quantized_matmul_batched(x, wmat, quant.bits_for(name),
+                                        quant.m, quant.force_mode)
+    return jnp.einsum("eck,ekn->ecn", x, wmat.astype(x.dtype))

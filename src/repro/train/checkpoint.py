@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: atomic, async, mesh-agnostic, auto-resume.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a temp dir
+and ``os.replace``d into place, so a crash mid-save never corrupts the latest
+checkpoint.  Arrays are saved in logical (unsharded) layout keyed by pytree
+path, so a restart may use a different mesh shape (elastic scaling): loading
+device_puts each array with the *new* mesh's shardings.
+
+``AsyncCheckpointer`` runs the serialization on a worker thread; ``wait()``
+joins before the next save or on shutdown (at most one in flight — matching
+typical async-checkpoint semantics).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+_SEP = "||"
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                        for k in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten(tree_like: Params, flat: Dict[str, np.ndarray]) -> Params:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                        for k in path)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"checkpoint shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: Params,
+         meta: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {"step": int(step), "time": time.time(),
+                    "n_arrays": len(flat), **(meta or {})}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load(ckpt_dir: str, tree_like: Params, step: Optional[int] = None
+         ) -> Tuple[int, Params, Dict[str, Any]]:
+    """Restore into the structure (and shardings) of ``tree_like``."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as npz:
+        flat = {k: npz[k] for k in npz.files}
+    restored = _unflatten(tree_like, flat)
+
+    def put(like, arr):
+        if hasattr(like, "sharding"):
+            return jax.device_put(arr.astype(like.dtype), like.sharding)
+        return arr
+    restored = jax.tree.map(put, tree_like, restored)
+    return step, restored, manifest
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (latest_step(ckpt_dir),) if s is not None)
+    names = sorted(n for n in os.listdir(ckpt_dir)
+                   if re.fullmatch(r"step_\d+", n))
+    for name in names[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """One-in-flight async saver (serialize on a worker thread)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Params,
+             meta: Optional[Dict[str, Any]] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, meta)
+                prune(self.ckpt_dir, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

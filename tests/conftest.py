@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run against the source tree; keep device count at 1 here (the
+# dry-run sets its own XLA_FLAGS in-process — see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,133 @@
+"""Coverage for the late-stage additions: WKV Pallas kernel, pre-quantized
+weight storage, and the trip-count-aware HLO cost parser."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.wkv_gemm import hbm_traffic_model, wkv_apply, wkv_reference
+
+
+class TestWkvKernel:
+    @pytest.mark.parametrize("bh,s,d,chunk", [(4, 64, 16, 16), (2, 33, 8, 32),
+                                              (8, 128, 64, 64), (1, 7, 4, 4)])
+    def test_matches_oracle(self, bh, s, d, chunk):
+        rng = np.random.default_rng(bh * 100 + s)
+        r = jnp.array(rng.standard_normal((bh, s, d)), jnp.float32) * 0.5
+        k = jnp.array(rng.standard_normal((bh, s, d)), jnp.float32) * 0.5
+        v = jnp.array(rng.standard_normal((bh, s, d)), jnp.float32) * 0.5
+        w = jnp.array(rng.uniform(0.8, 0.999, (bh, s, d)), jnp.float32)
+        u = jnp.array(rng.standard_normal((bh, d)), jnp.float32) * 0.1
+        y_k = np.asarray(wkv_apply(r, k, v, w, u, chunk=chunk))
+        y_r = np.asarray(wkv_reference(r, k, v, w, u))
+        denom = max(np.abs(y_r).max(), 1e-6)
+        assert np.abs(y_k - y_r).max() / denom < 1e-5
+
+    def test_chunk_invariance(self):
+        rng = np.random.default_rng(0)
+        args = [jnp.array(rng.standard_normal((2, 32, 8)), jnp.float32) * 0.3
+                for _ in range(3)]
+        w = jnp.array(rng.uniform(0.9, 0.999, (2, 32, 8)), jnp.float32)
+        u = jnp.array(rng.standard_normal((2, 8)), jnp.float32) * 0.1
+        y8 = np.asarray(wkv_apply(*args[:3], w, u, chunk=8))
+        y32 = np.asarray(wkv_apply(*args[:3], w, u, chunk=32))
+        np.testing.assert_allclose(y8, y32, rtol=1e-6, atol=1e-6)
+
+    def test_traffic_model_reduction(self):
+        m = hbm_traffic_model(80, 32768, 64)
+        assert m["reduction"] > 50  # state-in-VMEM is a large win
+
+
+class TestPrequant:
+    def test_prequant_matches_dynamic_path(self):
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.quant.prequant import prequantize
+
+        cfg = get_config("llama3.2-1b", smoke=True, quant="w12")
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        qparams = prequantize(params, cfg.quant)
+        t = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                               cfg.vocab_size)
+        c1 = lm.init_cache(cfg, 2, 32)
+        c2 = lm.init_cache(cfg, 2, 32)
+        l1, _, _ = lm.prefill(params, cfg, t, c1)
+        l2, _, _ = lm.prefill(qparams, cfg, t, c2)
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l2, np.float32), atol=1e-4)
+
+    def test_storage_dtypes(self):
+        from repro.quant.prequant import prequantize
+        from repro.quant.policy import QuantConfig
+
+        params = {"blocks": {"pos0": {"mlp": {
+            "wi": jnp.ones((32, 64), jnp.float32),
+            "wo": jnp.ones((64, 32), jnp.float32)}}}}
+        q8 = prequantize(params, QuantConfig(enabled=True, default_bits=8))
+        assert q8["blocks"]["pos0"]["mlp"]["wi"]["q"].dtype == jnp.int8
+        q12 = prequantize(params, QuantConfig(enabled=True, default_bits=12))
+        assert q12["blocks"]["pos0"]["mlp"]["wi"]["q"].dtype == jnp.int16
+
+    def test_non_weight_leaves_untouched(self):
+        from repro.quant.prequant import prequantize
+        from repro.quant.policy import QuantConfig
+
+        params = {"ln_f": {"scale": jnp.ones((8,))},
+                  "blocks": {"pos0": {"attn": {
+                      "wq": jnp.ones((16, 16), jnp.float32)}}}}
+        q = prequantize(params, QuantConfig(enabled=True, default_bits=8))
+        assert isinstance(q["ln_f"]["scale"], jax.Array)
+        assert isinstance(q["blocks"]["pos0"]["attn"]["wq"], dict)
+
+
+class TestHloCostParser:
+    def test_scan_trip_counts(self):
+        from repro.launch.hlo_stats import parse_costs
+
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=10)
+            def body2(c, _):
+                def inner(c2, _):
+                    return c2 @ w, None
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+            out2, _ = jax.lax.scan(body2, out, None, length=5)
+            return out2
+
+        spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        txt = jax.jit(f).lower(spec, spec).compile().as_text()
+        c = parse_costs(txt)
+        assert c["flops"] == pytest.approx((10 + 15) * 2 * 64**3)
+
+    def test_dot_general_batched_flops(self):
+        from repro.launch.hlo_stats import parse_costs
+
+        def f(a, b):
+            return jnp.einsum("bik,bkj->bij", a, b)
+
+        a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+        txt = jax.jit(f).lower(a, b).compile().as_text()
+        c = parse_costs(txt)
+        assert c["flops"] == pytest.approx(2 * 4 * 8 * 8 * 16)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 3))
+def test_property_ef_compression_error_feedback_contracts(seed, steps):
+    """Error feedback keeps compression unbiased: the residual after each
+    round is bounded by one quantization step of the current magnitude."""
+    from repro.dist.collectives import ef_compress
+
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((64,)), jnp.float32)
+    err = jnp.zeros((64,))
+    for _ in range(steps):
+        q, scale, err = ef_compress(x, err)
+        assert float(jnp.abs(err).max()) <= float(scale) * 0.5 + 1e-7
+        recon = q.astype(jnp.float32) * scale + err
+        np.testing.assert_allclose(np.asarray(recon), np.asarray(x + 0 * err),
+                                   atol=float(scale) + 1e-6)

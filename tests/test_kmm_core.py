@@ -1,0 +1,164 @@
+"""Core KMM algorithm tests: exactness (incl. property-based), digit
+bookkeeping, Algorithm-5 accumulation, and the precision-scalable dispatch
+rule — the paper's Algorithms 1-5 and Section IV-C."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    digit_split, kmm_n, ksm_n, ksmm, max_exact_k, mm_n, preaccum_matmul,
+    select_mode, sm_n,
+)
+from repro.core.dispatch import (
+    Mode, conv_mults_per_product, efficiency_roof, kmm_levels_needed,
+)
+
+
+def _rand(rng, lo, hi, shape):
+    return rng.integers(lo, hi, size=shape).astype(np.int32)
+
+
+@pytest.mark.parametrize("w,n", [(8, 1), (8, 2), (12, 2), (14, 2), (12, 4),
+                                 (16, 2), (16, 4)])
+@pytest.mark.parametrize("signed", [False, True])
+def test_kmm_mm_exact(w, n, signed):
+    rng = np.random.default_rng(w * 100 + n + signed)
+    k = min(max_exact_k(w), 96)
+    if k < 1:
+        pytest.skip("w too wide for int32-exact output")
+    lo, hi = (-(2 ** (w - 1)), 2 ** (w - 1)) if signed else (0, 2**w)
+    a = _rand(rng, lo, hi, (17, k))
+    b = _rand(rng, lo, hi, (k, 23))
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    for fn in (kmm_n, mm_n):
+        out = np.asarray(fn(jnp.array(a), jnp.array(b), w=w, n=n))
+        np.testing.assert_array_equal(out.astype(np.int64), ref,
+                                      err_msg=f"{fn.__name__} w={w} n={n}")
+
+
+@pytest.mark.parametrize("w,n", [(8, 2), (12, 2), (16, 4), (31, 2)])
+def test_scalar_algorithms_exact(w, n):
+    rng = np.random.default_rng(n)
+    w_eff = min(w, 15)  # elementwise products must fit int32
+    a = _rand(rng, 0, 2**w_eff, (64,))
+    b = _rand(rng, 0, 2**w_eff, (64,))
+    ref = a.astype(np.int64) * b.astype(np.int64)
+    for fn in (sm_n, ksm_n):
+        out = np.asarray(fn(jnp.array(a), jnp.array(b), w=w_eff, n=n))
+        np.testing.assert_array_equal(out.astype(np.int64), ref)
+
+
+def test_ksmm_matches_matmul():
+    rng = np.random.default_rng(0)
+    a = _rand(rng, -2**11, 2**11, (6, 16))
+    b = _rand(rng, -2**11, 2**11, (16, 5))
+    out = np.asarray(ksmm(jnp.array(a), jnp.array(b), w=12, n=2))
+    np.testing.assert_array_equal(out.astype(np.int64),
+                                  a.astype(np.int64) @ b.astype(np.int64))
+
+
+def test_digit_split_identity():
+    rng = np.random.default_rng(1)
+    x = rng.integers(-2**15, 2**15, size=(128,)).astype(np.int32)
+    for h in (4, 7, 8):
+        hi, lo = digit_split(jnp.array(x), h)
+        recon = (np.asarray(hi).astype(np.int64) << h) + np.asarray(lo)
+        np.testing.assert_array_equal(recon, x)
+        assert (np.asarray(lo) >= 0).all() and (np.asarray(lo) < 2**h).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    w=st.integers(4, 14),
+    n=st.sampled_from([1, 2, 4]),
+    m_dim=st.integers(1, 8),
+    k_dim=st.integers(1, 32),
+    n_dim=st.integers(1, 8),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_kmm_exact(w, n, m_dim, k_dim, n_dim, signed, seed):
+    """Property: KMM == exact integer matmul for any shape/width/digits
+    within the int32-exactness envelope."""
+    if max_exact_k(w) < k_dim:
+        k_dim = max_exact_k(w)
+    rng = np.random.default_rng(seed)
+    lo, hi = (-(2 ** (w - 1)), 2 ** (w - 1)) if signed else (0, 2**w)
+    a = _rand(rng, lo, hi, (m_dim, k_dim))
+    b = _rand(rng, lo, hi, (k_dim, n_dim))
+    out = np.asarray(kmm_n(jnp.array(a), jnp.array(b), w=w, n=n))
+    np.testing.assert_array_equal(
+        out.astype(np.int64), a.astype(np.int64) @ b.astype(np.int64))
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.sampled_from([1, 2, 4, 8]), groups=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_alg5_preaccum_bit_exact(p, groups, seed):
+    """Algorithm 5's two-level accumulation is bit-identical to flat
+    accumulation for integers (the hardware saving is free of error)."""
+    rng = np.random.default_rng(seed)
+    k = p * groups
+    a = _rand(rng, -2**7, 2**7, (5, k))
+    b = _rand(rng, -2**7, 2**7, (k, 7))
+    out = np.asarray(preaccum_matmul(jnp.array(a), jnp.array(b), p=p))
+    np.testing.assert_array_equal(out.astype(np.int64),
+                                  a.astype(np.int64) @ b.astype(np.int64))
+
+
+class TestDispatch:
+    """Paper Section IV-C mode windows for m=8."""
+
+    def test_mode_windows(self):
+        for w in range(1, 9):
+            assert select_mode(w, 8).mode is Mode.MM1
+        for w in range(9, 15):
+            assert select_mode(w, 8).mode is Mode.KMM2
+        for w in (15, 16):
+            assert select_mode(w, 8).mode is Mode.MM2
+
+    def test_pass_counts(self):
+        assert select_mode(8, 8).passes == 1
+        assert select_mode(12, 8).passes == 3
+        assert select_mode(16, 8).passes == 4
+
+    def test_kmm2_upper_bound_is_2m_minus_2(self):
+        # the A_s digits need m bits: exactly the paper's w <= 2m-2 rule
+        assert select_mode(14, 8).mode is Mode.KMM2
+        assert select_mode(15, 8).mode is Mode.MM2
+
+    def test_efficiency_roofs(self):
+        # Fig. 11: roof 4/3 inside the KMM2 window, 1 elsewhere
+        assert efficiency_roof(8, 8) == 1.0
+        assert efficiency_roof(12, 8) == pytest.approx(4 / 3)
+        assert efficiency_roof(14, 8) == pytest.approx(4 / 3)
+        assert efficiency_roof(16, 8) == 1.0
+
+    def test_conv_mults(self):
+        # Eq. 13: 4**ceil(log2(ceil(w/m)))
+        assert conv_mults_per_product(8, 8) == 1
+        assert conv_mults_per_product(16, 8) == 4
+        assert conv_mults_per_product(32, 8) == 16
+
+    def test_recursion_depth(self):
+        assert kmm_levels_needed(12, 8) == 1
+        assert kmm_levels_needed(28, 8) == 3  # +1 carry growth per level
+
+
+def test_max_exact_k():
+    assert max_exact_k(8) == 2**15
+    assert max_exact_k(14) == 2**3
+    assert max_exact_k(16) == 0
+
+
+def test_kmm_float_combine_close():
+    rng = np.random.default_rng(3)
+    a = _rand(rng, -2**13, 2**13, (32, 512))
+    b = _rand(rng, -2**13, 2**13, (512, 32))
+    out = np.asarray(kmm_n(jnp.array(a), jnp.array(b), w=14, n=2,
+                           combine_dtype=jnp.float32))
+    ref = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.float64)
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    assert rel < 1e-6

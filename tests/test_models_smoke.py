@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of the same
+family, one forward/train step on CPU, asserting output shapes + no NaNs,
+plus a serve-path prefill/decode consistency check."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+from repro.models import lm
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.frontend == "vision":
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.frontend_dim))
+    if cfg.is_encdec:
+        batch["enc_frames"] = jax.random.normal(key, (B, S, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = lm.forward_train(
+        params, cfg, batch["tokens"],
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    s_out = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, s_out, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_finite_grads(arch):
+    cfg = get_config(arch, smoke=True, quant="mixed")
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert np.isfinite(np.asarray(g, np.float32)).all(), path
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_consistency(arch):
+    """decode_step at position S must match forward_train's next-token logits
+    (KV cache/recurrent state correctness across the prefill/decode split)."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    tokens = batch["tokens"]
+
+    cache = lm.init_cache(cfg, B, S + 8)
+    last_logits, cache, mem = lm.prefill(
+        params, cfg, tokens, cache,
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    full_logits, _ = lm.forward_train(
+        params, cfg, tokens,
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_frames=batch.get("enc_frames"))
+    np.testing.assert_allclose(
+        np.asarray(last_logits, np.float32),
+        np.asarray(full_logits[:, -1, :], np.float32), atol=2e-2, rtol=2e-2)
+
+    # one decode step continues the sequence
+    nt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    pos = S + (cfg.frontend_tokens if cfg.frontend == "vision" else 0)
+    logits2, cache2 = lm.decode_step(params, cfg, nt, cache, jnp.int32(pos),
+                                     mem=mem)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # and it must equal the train-forward logits on the extended sequence
+    if cfg.frontend != "vision":
+        ext = jnp.concatenate([tokens, nt[:, None]], axis=1)
+        full2, _ = lm.forward_train(params, cfg, ext,
+                                    enc_frames=batch.get("enc_frames"))
+        np.testing.assert_allclose(
+            np.asarray(logits2, np.float32),
+            np.asarray(full2[:, -1, :], np.float32), atol=2e-2, rtol=2e-2)
+
+
+def test_long_500k_applicability_rules():
+    applicable = {a for a in list_archs()
+                  if cell_applicable(get_config(a), "long_500k")}
+    assert applicable == {"jamba-v0.1-52b", "rwkv6-3b"}
+    for a in list_archs():
+        assert cell_applicable(get_config(a), "train_4k")
+
+
+def test_param_counts_full_configs():
+    """Full configs land near their nameplate sizes (sanity of the exact
+    config transcription; MODEL_FLOPS in the roofline uses these counts)."""
+    from repro.models.config import count_active_params, count_params
+    expect = {
+        "gemma-2b": (2.0e9, 3.5e9),
+        "nemotron-4-15b": (14e9, 17e9),
+        "stablelm-12b": (11e9, 13.5e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "qwen3-moe-30b-a3b": (28e9, 33e9),
+        "jamba-v0.1-52b": (48e9, 56e9),
+        "rwkv6-3b": (2.5e9, 3.5e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(get_config(arch))
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+    active = count_active_params(get_config("qwen3-moe-30b-a3b"))
+    assert 2e9 < active < 4.5e9  # ~3B active

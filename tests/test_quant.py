@@ -1,0 +1,95 @@
+"""Quantized-matmul layer tests: error bounds, STE gradients, mode routing,
+and the batched expert path."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.policy import POLICY_MIXED, POLICY_W12, QuantConfig
+from repro.quant.qmatmul import (
+    maybe_quantized_matmul, quantized_matmul, quantized_matmul_batched,
+)
+
+
+def test_error_decreases_with_bits():
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.array(rng.standard_normal((128, 64)), jnp.float32)
+    ref = np.asarray(x @ w)
+    errs = []
+    for bits in (4, 8, 12):
+        out = np.asarray(quantized_matmul(x, w, bits))
+        errs.append(np.abs(out - ref).max() / np.abs(ref).max())
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 2e-3
+
+
+@pytest.mark.parametrize("bits", [8, 12, 16])
+def test_relative_error_bound(bits):
+    rng = np.random.default_rng(bits)
+    x = jnp.array(rng.standard_normal((16, 256)), jnp.float32)
+    w = jnp.array(rng.standard_normal((256, 32)), jnp.float32)
+    ref = np.asarray(x @ w)
+    out = np.asarray(quantized_matmul(x, w, bits))
+    rel = np.abs(out - ref).max() / np.abs(ref).max()
+    # ~ K * q_err^2 accumulation; generous envelope per bit level
+    assert rel < {8: 0.05, 12: 0.004, 16: 1e-3}[bits]
+
+
+def test_ste_gradients_match_full_precision():
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.standard_normal((8, 32)), jnp.float32)
+    w = jnp.array(rng.standard_normal((32, 16)), jnp.float32)
+
+    gx_q, gw_q = jax.grad(
+        lambda x, w: quantized_matmul(x, w, 8).sum(), argnums=(0, 1))(x, w)
+    gx_f, gw_f = jax.grad(lambda x, w: (x @ w).sum(), argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx_q), np.asarray(gx_f), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw_q), np.asarray(gw_f), rtol=1e-5)
+
+
+def test_batched_expert_path():
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.standard_normal((4, 10, 32)), jnp.float32)   # (E,C,K)
+    w = jnp.array(rng.standard_normal((4, 32, 16)), jnp.float32)   # (E,K,N)
+    out = np.asarray(quantized_matmul_batched(x, w, 12))
+    ref = np.asarray(jnp.einsum("eck,ekn->ecn", x, w))
+    assert np.abs(out - ref).max() / np.abs(ref).max() < 0.004
+
+
+def test_policy_routing():
+    q = POLICY_MIXED
+    assert q.bits_for("blk0.mlp.wi") == 8
+    assert q.bits_for("lm_head") == 12
+    assert q.bits_for("blk3.attn.o_proj") == 12
+    assert q.plan_for("lm_head").mode.value == "kmm2"
+    assert q.plan_for("blk0.mlp.wi").mode.value == "mm1"
+    assert POLICY_W12.plan_for("anything").passes == 3
+
+
+def test_disabled_quant_is_plain_matmul():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.standard_normal((4, 8)), jnp.bfloat16)
+    w = jnp.array(rng.standard_normal((8, 4)), jnp.float32)
+    out = maybe_quantized_matmul(x, w, QuantConfig(), "any")
+    ref = x @ w.astype(jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(6, 14), m_dim=st.integers(1, 16),
+       k_dim=st.integers(8, 64), seed=st.integers(0, 2**31 - 1))
+def test_property_quant_error_envelope(bits, m_dim, k_dim, seed):
+    """|quantized - exact| bounded by first-order quantization noise."""
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((m_dim, k_dim)), jnp.float32)
+    w = jnp.array(rng.standard_normal((k_dim, 8)), jnp.float32)
+    out = np.asarray(quantized_matmul(x, w, bits))
+    ref = np.asarray(x @ w)
+    qstep = 2.0 ** (1 - bits)
+    # per-element: sum_k (|x| dW + |w| dX + dXdW); envelope with margin
+    bound = 4.0 * qstep * np.abs(np.asarray(x)).max() \
+        * np.abs(np.asarray(w)).max() * k_dim + 1e-5
+    assert np.abs(out - ref).max() < bound
