@@ -1,0 +1,10 @@
+"""Distributed execution: sharding rules and quantized collectives.
+
+``repro.dist.sharding`` owns the logical-axis partitioning rules (MaxText
+style) consumed by the train loop, step builders, and serve engine;
+``repro.dist.collectives`` provides the communication-efficient primitives
+(error-feedback int8 all-reduce, ring all-gather matmul, split-K decode
+attention) that compose the paper's low-bit arithmetic with mesh
+parallelism.  See DESIGN.md §4.
+"""
+from repro.dist import collectives, sharding  # noqa: F401

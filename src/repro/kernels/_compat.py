@@ -1,0 +1,6 @@
+"""Pallas API compatibility across jax versions."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 exposes pltpu.CompilerParams as TPUCompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

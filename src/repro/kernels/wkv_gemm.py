@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 Array = jax.Array
 
 
@@ -72,7 +74,7 @@ def wkv_apply(r: Array, k: Array, v: Array, w: Array, u: Array, *,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)

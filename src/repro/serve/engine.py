@@ -4,9 +4,15 @@ A minimal-but-real continuous-batching engine: requests are padded into a
 fixed batch, prefilled once, then decoded step-by-step with greedy or
 temperature sampling.  All matmuls ride the model's quantized KMM policy —
 this is the paper's deployment scenario (integer inference accelerator).
+
+Pass ``mesh=`` to serve sharded: params take the ``repro.dist.sharding``
+param rules, the per-group decode cache takes the cache rules (batch over
+``data``, kv-heads over ``model``), and prefill/decode jits run under the
+mesh so GSPMD partitions them (DESIGN.md §4.3).
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -14,7 +20,9 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
+from repro.dist import sharding as dist_sharding
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -42,8 +50,13 @@ class ServeStats:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Params, max_seq: int = 512,
-                 batch_size: int = 4, rng_seed: int = 0):
+                 batch_size: int = 4, rng_seed: int = 0,
+                 mesh: Optional[Mesh] = None):
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            params = jax.device_put(
+                params, dist_sharding.param_sharding(params, mesh))
         self.params = params
         self.max_seq = max_seq
         self.batch = batch_size
@@ -52,6 +65,17 @@ class Engine:
             lambda p, c, tok, t, mem: lm.decode_step(p, cfg, tok, c, t, mem=mem))
         self._prefill = jax.jit(
             lambda p, c, toks: lm.prefill(p, cfg, toks, c))
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def _make_cache(self, b: int):
+        cache = lm.init_cache(self.cfg, b, self.max_seq)
+        if self.mesh is not None:
+            cache = jax.device_put(
+                cache,
+                dist_sharding.cache_sharding(cache, self.mesh, batch=b))
+        return cache
 
     def generate(self, requests: List[Request]) -> ServeStats:
         cfg = self.cfg
@@ -68,27 +92,28 @@ class Engine:
         toks = np.zeros((b, plen), np.int32)
         for i, r in enumerate(group):
             toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        cache = lm.init_cache(cfg, b, self.max_seq)
-        t0 = time.time()
-        logits, cache, mem = self._prefill(self.params, cache,
-                                           jnp.asarray(toks))
-        logits.block_until_ready()
-        stats.prefill_s += time.time() - t0
-        max_new = max(r.max_new_tokens for r in group)
-        pos = plen
-        t0 = time.time()
-        for step in range(max_new):
-            next_tok = self._sample(logits, group)
-            for i, r in enumerate(group):
-                if step < r.max_new_tokens:
-                    r.generated.append(int(next_tok[i]))
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(next_tok),
-                                         jnp.int32(pos), mem)
-            pos += 1
-            stats.decode_steps += 1
-        jax.block_until_ready(logits)
-        stats.decode_s += time.time() - t0
+        cache = self._make_cache(b)
+        with self._mesh_ctx():
+            t0 = time.time()
+            logits, cache, mem = self._prefill(self.params, cache,
+                                               jnp.asarray(toks))
+            logits.block_until_ready()
+            stats.prefill_s += time.time() - t0
+            max_new = max(r.max_new_tokens for r in group)
+            pos = plen
+            t0 = time.time()
+            for step in range(max_new):
+                next_tok = self._sample(logits, group)
+                for i, r in enumerate(group):
+                    if step < r.max_new_tokens:
+                        r.generated.append(int(next_tok[i]))
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(next_tok),
+                                             jnp.int32(pos), mem)
+                pos += 1
+                stats.decode_steps += 1
+            jax.block_until_ready(logits)
+            stats.decode_s += time.time() - t0
 
     def _sample(self, logits: jax.Array, group: List[Request]) -> np.ndarray:
         temps = np.array([r.temperature for r in group], np.float32)

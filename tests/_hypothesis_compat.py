@@ -1,0 +1,93 @@
+"""Offline fallback for ``hypothesis``.
+
+CI and the dev container may not have hypothesis installed (no network at
+test time).  When the real package is available it is re-exported verbatim;
+otherwise ``given``/``settings``/``strategies`` are backed by fixed-seed
+sampled cases: each ``@given`` test runs ``max_examples`` times with values
+drawn from a numpy Generator seeded by the test's qualified name, so runs
+are deterministic across machines and give real (if non-shrinking)
+property coverage.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import os
+import zlib
+
+try:   # real hypothesis when installed (the `test` extra)
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def settings(max_examples=10, deadline=None, **_):
+        """Records max_examples on the (given-wrapped) test function."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            # NOTE: no functools.wraps — pytest would follow __wrapped__ to
+            # the original signature and demand fixtures for the sampled
+            # parameters.  Copy identity attributes by hand instead.
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 10)
+                cap = os.environ.get("COMPAT_MAX_EXAMPLES")
+                if cap:
+                    n = min(n, int(cap))
+                seed0 = zlib.crc32(fn.__qualname__.encode("utf-8"))
+                for i in range(n):
+                    rng = np.random.default_rng((seed0 + i) & 0xFFFFFFFF)
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on sampled case "
+                            f"{drawn!r} (example {i + 1}/{n})") from e
+
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(wrapper, attr, getattr(fn, attr))
+            wrapper.hypothesis_compat_fallback = True
+            return wrapper
+
+        return deco

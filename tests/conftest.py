@@ -4,3 +4,6 @@ import sys
 # Tests run against the source tree; keep device count at 1 here (the
 # dry-run sets its own XLA_FLAGS in-process — see launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Make tests/_hypothesis_compat.py importable regardless of pytest import
+# mode / invocation directory.
+sys.path.insert(0, os.path.dirname(__file__))

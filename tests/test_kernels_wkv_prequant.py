@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.wkv_gemm import hbm_traffic_model, wkv_apply, wkv_reference
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     digit_split, kmm_n, ksm_n, ksmm, max_exact_k, mm_n, preaccum_matmul,

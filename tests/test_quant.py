@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.quant.policy import POLICY_MIXED, POLICY_W12, QuantConfig
 from repro.quant.qmatmul import (

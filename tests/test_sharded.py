@@ -104,8 +104,8 @@ with mesh:
         "labels": jnp.zeros((8, 64), jnp.int32),
         "mask": jnp.ones((8, 64), jnp.float32),
     }
-    batch = {k: jax.device_put(v, NamedSharding(mesh, P(("pod",) if False else ("data",))))
-             if v.ndim and False else v for k, v in batch.items()}
+    batch = {k: jax.device_put(v, NamedSharding(mesh, P("data")))
+             for k, v in batch.items()}
     p2, s2, metrics = step_fn(params, opt_state, batch)
     assert np.isfinite(float(metrics["loss"]))
 
