@@ -183,7 +183,7 @@ _PAPER_T3 = {
 def table3():
     """DSP counts follow multiplication counts (2 mults/DSP on Agilex);
     ALM trends follow the AU adder model; frequencies are synthesis facts we
-    report from the paper (no TPU analogue — DESIGN.md §8)."""
+    report from the paper (no TPU analogue — DESIGN.md §9)."""
     rows, checks = [], []
     xy = 32 * 32
     for (arch, w), (dsps_p, alms_p, freq_p) in _PAPER_T3.items():

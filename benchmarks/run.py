@@ -31,10 +31,12 @@ def _emit(rows, checks, csv_lines, check_lines):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-walltime", action="store_true")
+    ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
     args = ap.parse_args()
 
-    from benchmarks import bench_roofline, bench_walltime, paper_tables
+    from benchmarks import bench_roofline, bench_serve, bench_walltime, \
+        paper_tables
 
     csv_lines = ["name,us_per_call,derived"]
     check_lines = []
@@ -48,6 +50,10 @@ def main() -> None:
     if not args.skip_walltime:
         rows = bench_walltime.run()
         _emit(rows, bench_walltime.checks(rows), csv_lines, check_lines)
+
+    if not args.skip_serve:
+        rows = bench_serve.run()
+        _emit(rows, bench_serve.checks(rows), csv_lines, check_lines)
 
     roof_rows = bench_roofline.run(args.dryrun_dir)
     _emit(roof_rows, [], csv_lines, check_lines)

@@ -39,14 +39,20 @@ def main():
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=96, batch_size=args.batch)
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size, size=12)),
-                    max_new_tokens=args.max_new) for _ in range(args.requests)]
+    # ragged prompts + mixed budgets: the continuous-batching scheduler
+    # admits each request into the first freed slot (no group barrier)
+    reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
+                                             size=rng.integers(4, 17))),
+                    max_new_tokens=int(rng.integers(1, args.max_new + 1)))
+            for _ in range(args.requests)]
     t0 = time.time()
     stats = engine.generate(reqs)
     wall = time.time() - t0
+    ttft = [r.ttft_s for r in stats.requests]
     print(f"served {len(reqs)} requests in {wall:.1f}s "
           f"(prefill {stats.prefill_s:.2f}s, decode {stats.decode_s:.2f}s, "
-          f"{stats.tokens_per_s:.1f} tok/s)")
+          f"{stats.generated_tokens} tokens, {stats.tokens_per_s:.1f} tok/s, "
+          f"ttft mean {np.mean(ttft)*1e3:.0f}ms)")
     for i, r in enumerate(reqs[:3]):
         print(f"  req{i}: {r.generated}")
 

@@ -5,7 +5,7 @@ Input-shape cells (LM-family, per assignment):
   prefill_32k  seq_len=32768  global_batch=32   (inference prefill)
   decode_32k   seq_len=32768  global_batch=128  (one-token decode w/ KV cache)
   long_500k    seq_len=524288 global_batch=1    (long-context decode;
-               sub-quadratic archs only — see DESIGN.md §5)
+               sub-quadratic archs only — see DESIGN.md §6)
 """
 from __future__ import annotations
 
@@ -72,7 +72,7 @@ def get_config(arch: str, *, smoke: bool = False,
 
 
 def cell_applicable(cfg: ModelConfig, shape: str) -> bool:
-    """The assignment's skip rules (documented in DESIGN.md §5)."""
+    """The assignment's skip rules (documented in DESIGN.md §6)."""
     cell = SHAPES[shape]
     if cell.name == "long_500k":
         return cfg.sub_quadratic

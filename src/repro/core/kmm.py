@@ -220,8 +220,23 @@ def max_exact_k(w: int, carrier_bits: int = 31) -> int:
     """Largest contraction length K for which an MM/KMM combine of unsigned
     ``w``-bit operands is exact in a signed ``carrier_bits+1``-bit carrier.
 
-    The widest intermediate is the recombined product ``~2**(2w)`` times the
-    accumulation head-room, so K <= 2**(carrier_bits - 2w).
+    Worst-case analysis (KMM, n=2, split at ``h = ceil(w/2)``): the shift
+    combine ``c1<<2h + (cs - c1 - c0)<<h + c0`` is ring arithmetic — shifts,
+    adds and subtracts are exact mod ``2**(carrier_bits+1)`` — so transient
+    wrap-around in the intermediates cannot corrupt the result; exactness is
+    governed solely by the *final recombined value* fitting the carrier.
+    The Karatsuba middle branch is not the widest term: ``a1 + a0`` and
+    ``b1 + b0`` are ``(h+1)``-bit digits, so ``cs <= K * (2**(h+1) - 2)**2
+    ~ K * 2**(w+2)``, which is dominated by the recombined product
+    ``K * (2**w - 1)**2 ~ K * 2**(2w)`` for every w >= 3.  The binding
+    constraint is therefore ``2w + log2(K) <= carrier_bits``, i.e.
+    ``K <= 2**(carrier_bits - 2w)``.  The true ceiling is
+    ``floor((2**31 - 1) / (2**w - 1)**2)``; this power-of-two bound is a
+    conservative under-approximation, and for ``w >= 11`` the two coincide:
+    ``K = 2**(31-2w)`` all-max operands stay below ``2**31`` while ``K+1``
+    overflows (for narrower ``w`` the ``(2**w - 1)`` slack leaves the true
+    ceiling slightly higher — see
+    ``test_max_exact_k_boundary_brute_force``).
     """
     head = carrier_bits - 2 * w
     return max(1 << head, 1) if head > 0 else 0

@@ -154,36 +154,48 @@ def param_sharding(params: Params, mesh: Mesh) -> Params:
         params)
 
 
+# Cache-leaf name -> axis index (within the (n_periods, slot, ...) layout)
+# that may shard over ``model``: attention kv-heads, rwkv heads, mamba inner.
+CACHE_MODEL_AXES = {
+    "k": 3,       # attn (n_periods, slot, Smax, K, D): kv-heads
+    "v": 3,
+    "wkv": 2,     # rwkv (n_periods, slot, H, D, D): heads
+    "ssm": 2,     # mamba (n_periods, slot, d_inner, d_state): inner dim
+    "conv": 3,    # mamba (n_periods, slot, cw-1, d_inner): inner dim
+}
+
+
 def cache_sharding(cache_shapes: Params, mesh: Mesh, *,
                    batch: int) -> Params:
     """NamedSharding pytree for a decode cache.
 
-    Cache leaves are laid out ``(n_periods, B, ...)``; the batch dim is
-    sharded over the data axes and attention K/V additionally shard their
-    kv-heads dim over ``model`` (so decode attention is head-parallel).
+    Cache leaves are laid out ``(n_periods, slot, ...)``: axis 1 is the
+    serve engine's decode-slot dimension (== the request batch), sharded
+    directly over the mesh's data axes.  Per-leaf model
+    parallelism: attention K/V shard their kv-heads dim, rwkv its head dim
+    and mamba its inner dim over ``model`` (see ``CACHE_MODEL_AXES``), so
+    decode stays head-/channel-parallel without resharding the weights.
+    ``batch`` is the slot count (sanity-checked against axis 1).
     """
     daxes = data_axes(mesh)
     dsize = 1
     for a in daxes:
         dsize *= mesh_axis_size(mesh, a)
     bentry = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    msize = mesh_axis_size(mesh, "model")
 
     def leaf_sharding(path, leaf):
         shape = tuple(leaf.shape)
         spec = [None] * len(shape)
-        # locate the batch dim (first dim matching ``batch``, skipping the
-        # period-stacking dim 0)
-        for i, d in enumerate(shape):
-            if i >= 1 and d == batch:
-                if bentry is not None and dsize > 1 and d % dsize == 0:
-                    spec[i] = bentry
-                break
+        # axis 1 is the slot dim in the (n_periods, slot, ...) layout
+        if len(shape) >= 2 and shape[1] == batch:
+            if bentry is not None and dsize > 1 and shape[1] % dsize == 0:
+                spec[1] = bentry
         name = _path_names(path)[-1]
-        if name in ("k", "v") and len(shape) == 5:
-            kh = shape[3]
-            msize = mesh_axis_size(mesh, "model")
-            if msize > 1 and kh % msize == 0:
-                spec[3] = "model"
+        m_axis = CACHE_MODEL_AXES.get(name)
+        if m_axis is not None and m_axis < len(shape) and msize > 1 \
+                and shape[m_axis] % msize == 0:
+            spec[m_axis] = "model"
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(leaf_sharding, cache_shapes)

@@ -46,7 +46,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str, quant: str,
     if not cell_applicable(cfg, shape):
         record.update(status="skipped",
                       reason="long_500k requires sub-quadratic decode "
-                             "(see DESIGN.md §5)")
+                             "(see DESIGN.md §6)")
         return record
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     ocfg = optim.AdamWConfig()

@@ -1,6 +1,9 @@
-"""Serving launcher: batched generation demo on a reduced config.
+"""Serving launcher: continuous-batching generation demo on a reduced config.
 
     python -m repro.launch.serve --arch gemma-2b --quant w12 --requests 8
+
+With ``--poisson RATE`` the requests arrive as a Poisson process (RATE
+requests/s) instead of all at once, so TTFT includes queueing delay.
 """
 from __future__ import annotations
 
@@ -17,9 +20,14 @@ def main() -> int:
     ap.add_argument("--quant", default="w12",
                     choices=["none", "w8", "w12", "mixed"])
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (continuous batching)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="stop token id (-1: none)")
+    ap.add_argument("--poisson", type=float, default=0.0,
+                    help="arrival rate in req/s (0: all at once)")
     ap.add_argument("--full-size", action="store_true",
                     help="full config (needs real accelerators)")
     args = ap.parse_args()
@@ -32,17 +40,27 @@ def main() -> int:
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch)
     rng = np.random.default_rng(0)
+    stop = (args.eos,) if args.eos >= 0 else ()
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
                                              size=rng.integers(4, 17))),
                     max_new_tokens=args.max_new,
-                    temperature=0.0 if i % 2 == 0 else 0.8)
+                    temperature=0.0 if i % 2 == 0 else 0.8,
+                    stop_tokens=stop)
             for i in range(args.requests)]
-    stats = engine.generate(reqs)
+    arrivals = None
+    if args.poisson > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.poisson,
+                                             size=len(reqs))).tolist()
+    stats = engine.generate(reqs, arrival_s=arrivals)
     for i, r in enumerate(reqs):
-        print(f"req{i}: prompt[{len(r.prompt)}] -> {r.generated}")
-    print(f"prefill {stats.prefill_s:.2f}s; decode {stats.decode_steps} steps "
-          f"in {stats.decode_s:.2f}s ({stats.tokens_per_s:.1f} tok/s, "
-          f"quant={args.quant})")
+        rs = r.stats
+        print(f"req{i}: prompt[{len(r.prompt)}] -> {r.generated} "
+              f"({rs.stop_reason}; ttft {rs.ttft_s*1e3:.0f}ms, "
+              f"latency {rs.latency_s*1e3:.0f}ms)")
+    print(f"prefill {stats.prefill_s:.2f}s; {stats.generated_tokens} tokens "
+          f"in {stats.decode_steps} decode steps / {stats.decode_s:.2f}s "
+          f"({stats.tokens_per_s:.1f} tok/s, quant={args.quant}); "
+          f"traces={engine.n_traces()}")
     return 0
 
 

@@ -187,11 +187,14 @@ def attn_cache_init(cfg, batch: int, max_seq: int, dtype) -> Params:
 
 
 def cached_attention(q: Array, ck: Array, cv: Array, q_offset: Array, *,
+                     kv_valid: Optional[Array] = None,
                      chunk: int = 256) -> Array:
     """Attention of a query chunk against the (partially filled) KV cache.
 
     q: (B, c, H, D) at global positions q_offset..q_offset+c-1;
     ck/cv: (B, Smax, K, D).  Row r attends kv positions <= q_offset + r.
+    ``kv_valid`` (B, Smax) additionally masks out cache slots that hold pad
+    tokens (ragged left-padded prompts).
     Peak memory O(sub_chunk * Smax) — the chunked-prefill working set.
     """
     b, c, h, d = q.shape
@@ -213,8 +216,10 @@ def cached_attention(q: Array, ck: Array, cv: Array, q_offset: Array, *,
         scores = jnp.einsum("bckgd,bskd->bckgs", qc, kt).astype(jnp.float32)
         scores = scores * scale
         row = q_offset + ci * sub + jnp.arange(sub, dtype=jnp.int32)
-        mask = kvpos[None, :] <= row[:, None]                # (sub, Smax)
-        scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+        mask = (kvpos[None, :] <= row[:, None])[None]        # (1, sub, Smax)
+        if kv_valid is not None:
+            mask = jnp.logical_and(mask, kv_valid[:, None, :])
+        scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bckgs,bskd->bckgd", probs, vt)
 
@@ -224,44 +229,71 @@ def cached_attention(q: Array, ck: Array, cv: Array, q_offset: Array, *,
 
 
 def attn_prefill_chunk(p: Params, x: Array, cache: Params, offset: Array,
-                       cfg, quant, name: str) -> Tuple[Array, Params]:
+                       cfg, quant, name: str,
+                       positions: Optional[Array] = None,
+                       kv_valid: Optional[Array] = None
+                       ) -> Tuple[Array, Params]:
     """One chunked-prefill step: project the chunk, extend the KV cache at
-    ``offset``, attend against everything cached so far."""
+    ``offset``, attend against everything cached so far.
+
+    ``positions`` (B, c) overrides the RoPE positions (ragged prompts where
+    cache index != logical position); ``kv_valid`` (B, Smax) masks pad slots.
+    """
     b, c, _ = x.shape
     q, k, v = _qkv(p, x, cfg, quant, name)
-    pos = offset + jnp.arange(c, dtype=jnp.int32)
+    pos = positions if positions is not None \
+        else offset + jnp.arange(c, dtype=jnp.int32)
     q = rope(q, pos, cfg.rope_theta)
     k = rope(k, pos, cfg.rope_theta)
     ck = jax.lax.dynamic_update_slice(
         cache["k"], k.astype(cache["k"].dtype), (0, offset, 0, 0))
     cv = jax.lax.dynamic_update_slice(
         cache["v"], v.astype(cache["v"].dtype), (0, offset, 0, 0))
-    out = cached_attention(q, ck, cv, offset)
+    out = cached_attention(q, ck, cv, offset, kv_valid=kv_valid)
     out = out.reshape(b, c, cfg.q_dim)
     out = maybe_quantized_matmul(out, p["wo"], quant, f"{name}.wo")
     return out, {"k": ck, "v": cv}
 
 
+def _as_batch_vec(pos, b: int) -> Array:
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
+
+
 def attn_decode(p: Params, x: Array, cache: Params, pos: Array, cfg, quant,
-                name: str) -> Tuple[Array, Params]:
-    """One-token decode: x (B, 1, d); cache k/v (B, Smax, K, D); pos scalar."""
+                name: str, positions: Optional[Array] = None,
+                kv_valid: Optional[Array] = None) -> Tuple[Array, Params]:
+    """One-token decode: x (B, 1, d); cache k/v (B, Smax, K, D).
+
+    ``pos`` is the cache write index — a scalar (lock-step batch) or a (B,)
+    vector (continuous batching: each slot at its own depth).  ``positions``
+    optionally supplies distinct RoPE positions (left-padded caches where
+    cache index != logical position); ``kv_valid`` (B, Smax) masks pad slots.
+    """
     b = x.shape[0]
     q, k, v = _qkv(p, x, cfg, quant, name)
-    pos_arr = jnp.full((1,), pos, dtype=jnp.int32)
-    q = rope(q, pos_arr, cfg.rope_theta)
-    k = rope(k, pos_arr, cfg.rope_theta)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    pos_b = _as_batch_vec(pos, b)
+    rpos = pos_b if positions is None else _as_batch_vec(positions, b)
+    q = rope(q, rpos[:, None], cfg.rope_theta)
+    k = rope(k, rpos[:, None], cfg.rope_theta)
+
+    def write(c, u, start):
+        return jax.lax.dynamic_update_slice(c, u.astype(c.dtype),
+                                            (start, 0, 0))
+
+    ck = jax.vmap(write)(cache["k"], k, pos_b)
+    cv = jax.vmap(write)(cache["v"], v, pos_b)
     kh, d = cfg.n_kv_heads, cfg.head_dim
     g = cfg.n_heads // kh
     qv = q.reshape(b, kh, g, d)
     scores = jnp.einsum("bkgd,bskd->bkgs", qv,
                         ck.astype(q.dtype)).astype(jnp.float32)
     scores = scores * (d**-0.5)
-    valid = jnp.arange(ck.shape[1], dtype=jnp.int32)[None, None, None, :] <= pos
-    scores = jnp.where(valid, scores, -1e30)
+    valid = (jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :]
+             <= pos_b[:, None])                              # (B, Smax)
+    if kv_valid is not None:
+        valid = jnp.logical_and(valid, kv_valid)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, cv.astype(q.dtype))
     out = out.reshape(b, 1, cfg.q_dim)

@@ -341,12 +341,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
 
 def _block_decode(p: Params, x: Array, spec: Block, cache: Params, pos_idx: int,
                   t: Array, cfg: ModelConfig,
-                  mem: Optional[Tuple[Array, Array]] = None):
+                  mem: Optional[Tuple[Array, Array]] = None,
+                  positions: Optional[Array] = None,
+                  kv_valid: Optional[Array] = None):
     quant = cfg.quant
     name = f"blk{pos_idx}.{spec.kind}"
     h = L.norm_apply(p["ln1"], x)
     if spec.kind == "attn":
-        y, new_c = L.attn_decode(p["attn"], h, cache, t, cfg, quant, name)
+        y, new_c = L.attn_decode(p["attn"], h, cache, t, cfg, quant, name,
+                                 positions=positions, kv_valid=kv_valid)
     elif spec.kind == "mamba":
         y, new_c = S.mamba_decode(p["mamba"], h, cache, cfg, quant, name)
     else:
@@ -366,9 +369,16 @@ def _block_decode(p: Params, x: Array, spec: Block, cache: Params, pos_idx: int,
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: Array, cache: Params,
-                t: Array, mem: Optional[Params] = None) -> Tuple[Array, Params]:
-    """One decode step. token: (B,) int32; t: scalar position; returns
-    (logits (B, V), new cache)."""
+                t: Array, mem: Optional[Params] = None,
+                positions: Optional[Array] = None,
+                kv_valid: Optional[Array] = None) -> Tuple[Array, Params]:
+    """One decode step. token: (B,) int32; returns (logits (B, V), new cache).
+
+    ``t`` is the KV-cache write index: a scalar for lock-step batches, or a
+    (B,) vector for continuous batching where every slot sits at its own
+    depth.  ``positions`` optionally gives distinct RoPE positions (defaults
+    to ``t``); ``kv_valid`` (B, Smax) masks pad cache slots (left-padded
+    prompts)."""
     x = _embed(params, cfg, token[:, None])
 
     def period(x, xs):
@@ -379,7 +389,9 @@ def decode_step(params: Params, cfg: ModelConfig, token: Array, cache: Params,
             if period_mem is not None:
                 m = period_mem[f"pos{pos}"]
             x, nc = _block_decode(period_params[f"pos{pos}"], x, spec,
-                                  period_cache[f"pos{pos}"], pos, t, cfg, mem=m)
+                                  period_cache[f"pos{pos}"], pos, t, cfg,
+                                  mem=m, positions=positions,
+                                  kv_valid=kv_valid)
             new_cache[f"pos{pos}"] = nc
         return x, new_cache
 
@@ -392,18 +404,51 @@ def decode_step(params: Params, cfg: ModelConfig, token: Array, cache: Params,
 PREFILL_CHUNK = 2048
 
 
+def _attn_max_seq(cfg: ModelConfig, cache: Params) -> Optional[int]:
+    """Smax of the attention KV cache, or None for attention-free models."""
+    for pos, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            return cache[f"pos{pos}"]["k"].shape[2]
+    return None
+
+
 def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
             frontend_embeds: Optional[Array] = None,
             enc_frames: Optional[Array] = None,
-            chunk_size: int = PREFILL_CHUNK):
+            chunk_size: int = PREFILL_CHUNK,
+            positions: Optional[Array] = None,
+            pad_mask: Optional[Array] = None,
+            last_idx: Optional[Array] = None):
     """Chunked prefill: the prompt runs through the model ``chunk_size``
     tokens at a time (vLLM/Sarathi-style), so peak activation memory is
     O(chunk * d) regardless of prompt length; attention/recurrent state
     carries across chunks through the cache.
 
-    Returns (last-position logits (B, V), cache, mem) where mem is the
+    Ragged prompts (mixed lengths in one padded batch) are exact when the
+    caller supplies:
+
+      * ``pad_mask`` (B, S) bool — True on real tokens.  Pad keys are masked
+        out of attention and the recurrent (mamba/rwkv) state is frozen
+        across pad positions, so each row's final state equals a per-row
+        unpadded run.
+      * ``positions`` (B, S) int32 — explicit RoPE positions (left-padded
+        batches, where cache index != logical position).  Defaults to
+        ``arange(S)``, which is already correct for right-padded batches.
+      * ``last_idx`` (B,) int32 — index of each row's last real token; the
+        returned logits are taken there (and the carried recurrent state is
+        snapshotted there for right-padded rows).
+
+    Ragged calls run as a single chunk (prompts are bucketed by the serving
+    engine, so S is already bounded); the plain path keeps the chunked scan.
+
+    Returns (last-real-position logits (B, V), cache, mem) where mem is the
     cross-attention memory for enc-dec models (None otherwise).
     """
+    ragged = (positions is not None or pad_mask is not None
+              or last_idx is not None)
+    if ragged and cfg.frontend == "vision" and frontend_embeds is not None:
+        raise NotImplementedError(
+            "ragged prefill does not support vision prefix tokens")
     x = constrain_batch_dim(_embed(params, cfg, tokens))
     if cfg.frontend == "vision" and frontend_embeds is not None:
         fx = _frontend_project(params, cfg, frontend_embeds)
@@ -418,51 +463,77 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
         mem = _encdec_memory(params, cfg, ex)
 
     b, s, _ = x.shape
+    kv_valid = None
+    if pad_mask is not None:
+        smax = _attn_max_seq(cfg, cache)
+        if smax is not None:
+            kv_valid = jnp.concatenate(
+                [pad_mask, jnp.ones((b, smax - s), bool)], axis=1)
+
+    def run_chunk(chunk_cache, xc, offset, pos_c, mask_c, li):
+        """One chunk through all periods; pos_c/mask_c/li are the ragged
+        extras (None on the plain path)."""
+
+        def period(carry, xs):
+            xc, offset = carry
+            period_params, period_cache, period_mem = xs
+            new_cache = {}
+            for pos, spec in enumerate(cfg.pattern):
+                p = period_params[f"pos{pos}"]
+                quant = cfg.quant
+                name = f"blk{pos}.{spec.kind}"
+                h = L.norm_apply(p["ln1"], xc)
+                if spec.kind == "attn":
+                    y, nc = L.attn_prefill_chunk(
+                        p["attn"], h, period_cache[f"pos{pos}"], offset, cfg,
+                        quant, name, positions=pos_c, kv_valid=kv_valid)
+                elif spec.kind == "mamba":
+                    y, nc = S.mamba_apply_stateful(
+                        p["mamba"], h, period_cache[f"pos{pos}"], cfg, quant,
+                        name, mask=mask_c, last_idx=li)
+                else:
+                    y, nc = R.rwkv_apply_stateful(
+                        p["rwkv"], h, period_cache[f"pos{pos}"], cfg, quant,
+                        name, mask=mask_c, last_idx=li)
+                xc = xc + y
+                if period_mem is not None:
+                    hm = L.norm_apply(p["lnx"], xc)
+                    pm = period_mem[f"pos{pos}"]
+                    xc = xc + L.xattn_apply(p["xattn"], hm, pm[0], pm[1], cfg,
+                                            quant, f"blk{pos}.xattn")
+                h = L.norm_apply(p["ln2"], xc)
+                if spec.moe:
+                    y, _ = M.moe_apply(p["moe"], h, cfg, quant,
+                                       f"blk{pos}.moe")
+                else:
+                    y = L.mlp_apply(p["mlp"], h, cfg.act, cfg.glu, quant,
+                                    f"blk{pos}.mlp")
+                xc = xc + y
+                new_cache[f"pos{pos}"] = nc
+            return (xc, offset), new_cache
+
+        (xc, _), new_cache = lax.scan(period, (xc, offset),
+                                      (params["blocks"], chunk_cache, mem))
+        return new_cache, xc
+
+    if ragged:
+        li = (last_idx.astype(jnp.int32) if last_idx is not None
+              else jnp.full((b,), s - 1, jnp.int32))
+        cache, xall = run_chunk(cache, x, jnp.int32(0), positions,
+                                pad_mask, li)
+        last_h = jnp.take_along_axis(xall, li[:, None, None], axis=1)
+        logits = _logits(params, cfg, last_h)
+        return logits[:, 0, :], cache, mem
+
     cs = min(chunk_size, s)
     while s % cs:
         cs //= 2
     n_chunks = s // cs
 
-    def period(carry, xs):
-        xc, offset = carry
-        period_params, period_cache, period_mem = xs
-        new_cache = {}
-        for pos, spec in enumerate(cfg.pattern):
-            p = period_params[f"pos{pos}"]
-            quant = cfg.quant
-            name = f"blk{pos}.{spec.kind}"
-            h = L.norm_apply(p["ln1"], xc)
-            if spec.kind == "attn":
-                y, nc = L.attn_prefill_chunk(
-                    p["attn"], h, period_cache[f"pos{pos}"], offset, cfg,
-                    quant, name)
-            elif spec.kind == "mamba":
-                y, nc = S.mamba_apply_stateful(
-                    p["mamba"], h, period_cache[f"pos{pos}"], cfg, quant, name)
-            else:
-                y, nc = R.rwkv_apply_stateful(
-                    p["rwkv"], h, period_cache[f"pos{pos}"], cfg, quant, name)
-            xc = xc + y
-            if period_mem is not None:
-                hm = L.norm_apply(p["lnx"], xc)
-                pm = period_mem[f"pos{pos}"]
-                xc = xc + L.xattn_apply(p["xattn"], hm, pm[0], pm[1], cfg,
-                                        quant, f"blk{pos}.xattn")
-            h = L.norm_apply(p["ln2"], xc)
-            if spec.moe:
-                y, _ = M.moe_apply(p["moe"], h, cfg, quant, f"blk{pos}.moe")
-            else:
-                y = L.mlp_apply(p["mlp"], h, cfg.act, cfg.glu, quant,
-                                f"blk{pos}.mlp")
-            xc = xc + y
-            new_cache[f"pos{pos}"] = nc
-        return (xc, offset), new_cache
-
-    def chunk_step(cache, ci):
+    def chunk_step(chunk_cache, ci):
         offset = ci * cs
         xc = lax.dynamic_slice_in_dim(x, offset, cs, axis=1)
-        (xc, _), new_cache = lax.scan(period, (xc, offset),
-                                      (params["blocks"], cache, mem))
+        new_cache, xc = run_chunk(chunk_cache, xc, offset, None, None, None)
         return new_cache, xc[:, -1]
 
     cache, lasts = lax.scan(chunk_step, cache,

@@ -5,7 +5,7 @@ Per head (state S in R^{D x D}):  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
 y_t = r_t (S_{t-1} + diag(u) k_t^T v_t).  The decay w_t is produced by a
 low-rank MLP on the token-shifted input (the v6 data-dependence).  The
 recurrence runs in fp32 (not an integer GEMM -> KMM inapplicable, DESIGN.md
-§5); the r/k/v/g/o projections ride the quantized KMM path.
+§6); the r/k/v/g/o projections ride the quantized KMM path.
 
 Implementation: time-step `lax.scan` for full sequences (state is
 (B, H, D, D), so an associative scan over matrices would materialize
@@ -14,7 +14,7 @@ long_500k-relevant path (state size is sequence-length independent).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,13 +85,23 @@ def _heads(x: Array, nh: int, hd: int) -> Array:
 
 
 def rwkv_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
-                        quant, name: str) -> Tuple[Array, Params]:
-    """Sequence forward from carried (shift, wkv) state; returns end state."""
+                        quant, name: str, mask: Optional[Array] = None,
+                        last_idx: Optional[Array] = None
+                        ) -> Tuple[Array, Params]:
+    """Sequence forward from carried (shift, wkv) state; returns end state.
+
+    Ragged prompts: ``mask`` (B, S) freezes the wkv state on pad positions
+    (decay forced to 1, kv contribution zeroed) and zeroes pad inputs so the
+    token shift at a left-pad boundary sees the same zeros an unpadded run
+    starts from; ``last_idx`` (B,) picks each row's last *real* token for the
+    carried shift state (right-padded prompts)."""
     b, s, d = x.shape
     hd = cfg.rwkv_head_dim
     nh = d // hd
     if cache is None:
         cache = rwkv_cache_init(cfg, b, x.dtype)
+    if mask is not None:
+        x = jnp.where(mask[:, :, None], x, 0)
     prev = cache["shift"].astype(x.dtype)
     streams, new_shift = _shift_mix(x, prev, p["mix"])
     r, k, v, g, w = _project(p, streams, quant, name, cfg)
@@ -99,6 +109,13 @@ def rwkv_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
     k = _heads(k.astype(jnp.float32), nh, hd)
     v = _heads(v.astype(jnp.float32), nh, hd)
     w = _heads(w, nh, hd)                                  # (B,S,H,hd)
+    if mask is not None:                                   # freeze on pads
+        m4 = mask[:, :, None, None]
+        k = jnp.where(m4, k, 0.0)
+        w = jnp.where(m4, w, 1.0)
+    if last_idx is not None:
+        new_shift = jnp.take_along_axis(
+            x, last_idx.astype(jnp.int32)[:, None, None], axis=1)
     u = p["u"]
 
     # Time-chunked scan: the matrix state (B, H, D, D) is carried across

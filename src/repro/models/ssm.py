@@ -1,6 +1,6 @@
 """Mamba (selective SSM) block — jamba's recurrent layer.
 
-Hardware/algorithm note (DESIGN.md §5): the selective-scan recurrence
+Hardware/algorithm note (DESIGN.md §6): the selective-scan recurrence
 ``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t`` has data-dependent diagonal decay
 and is computed in fp32 — it is not an integer GEMM, so the paper's KMM does
 not apply to it; the block's projections (in/out/x/dt) do ride the quantized
@@ -9,7 +9,7 @@ d_state) peak memory); decode is a single-step state update.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,16 +50,21 @@ def mamba_init(key, cfg, dtype) -> Params:
 
 
 def _ssm_inputs(p: Params, x: Array, cfg, quant, name: str,
-                conv_tail: Optional[Array] = None):
+                conv_tail: Optional[Array] = None,
+                mask: Optional[Array] = None):
     """Projections + causal depthwise conv; returns (x_conv, z, delta, B, C).
 
     ``conv_tail``: the previous chunk's last conv_width-1 pre-conv inputs
-    (zeros at sequence start)."""
+    (zeros at sequence start).  ``mask`` (B, S): pad positions get zeroed
+    pre-conv inputs, so conv windows spanning a ragged-prompt boundary see
+    exactly the zeros an unpadded run would."""
     di = cfg.expand * cfg.d_model
     ds = cfg.d_state
     dtr = _dt_rank(cfg.d_model)
     xz = maybe_quantized_matmul(x, p["in_proj"], quant, f"{name}.in_proj")
     x_in, z = jnp.split(xz, 2, axis=-1)
+    if mask is not None:
+        x_in = jnp.where(mask[:, :, None], x_in, 0)
     if conv_tail is None:
         x_pad = jnp.pad(x_in, ((0, 0), (cfg.conv_width - 1, 0), (0, 0)))
     else:
@@ -84,16 +89,25 @@ def _causal_conv(x_padded: Array, w: Array, b: Array) -> Array:
 
 
 def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
-                         quant, name: str, chunk: int = 128
+                         quant, name: str, chunk: int = 128,
+                         mask: Optional[Array] = None,
+                         last_idx: Optional[Array] = None
                          ) -> Tuple[Array, Params]:
     """Sequence forward from a carried (conv, ssm) state; returns the state
-    after the last position (chunked-prefill building block)."""
+    after the last position (chunked-prefill building block).
+
+    Ragged prompts: ``mask`` (B, S) freezes the recurrence on pad positions
+    (h_t = h_{t-1}) and zeroes their conv inputs, and ``last_idx`` (B,)
+    makes the carried conv tail end at each row's last *real* token instead
+    of the last padded position — so the returned state matches a per-row
+    unpadded run exactly."""
     b, s, _ = x.shape
     di, ds = cfg.expand * cfg.d_model, cfg.d_state
+    cw = cfg.conv_width
     if cache is None:
         cache = mamba_cache_init(cfg, b, x.dtype)
     x_conv, z, delta, b_mat, c_mat = _ssm_inputs(
-        p, x, cfg, quant, name, conv_tail=cache["conv"])
+        p, x, cfg, quant, name, conv_tail=cache["conv"], mask=mask)
     a = -jnp.exp(p["a_log"])                                 # (di, ds)
     x_f = x_conv.astype(jnp.float32)
 
@@ -108,6 +122,10 @@ def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
         d_c, b_c, c_c, x_c = sl(delta), sl(b_mat), sl(c_mat), sl(x_f)
         da = jnp.exp(d_c[..., None] * a[None, None])          # (B,c,di,ds)
         dbx = (d_c * x_c)[..., None] * b_c[:, :, None, :]     # (B,c,di,ds)
+        if mask is not None:                                  # freeze on pads
+            m_c = sl(mask)[..., None, None]
+            da = jnp.where(m_c, da, 1.0)
+            dbx = jnp.where(m_c, dbx, 0.0)
 
         def combine(e1, e2):
             a1, b1 = e1
@@ -125,9 +143,24 @@ def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = maybe_quantized_matmul(y, p["out_proj"], quant, f"{name}.out_proj")
     # conv tail for the next chunk: last cw-1 pre-conv inputs
-    xz = maybe_quantized_matmul(x[:, -(cfg.conv_width - 1):, :], p["in_proj"],
-                                quant, f"{name}.in_proj")
+    if last_idx is None:
+        xw = x[:, -(cw - 1):, :]
+    else:
+        # per-row window [last_idx-cw+2, last_idx], zero-padded below 0 and
+        # with pad rows zeroed, matching the unpadded run's tail exactly
+        xm = x if mask is None else jnp.where(mask[:, :, None], x, 0)
+        xp = jnp.concatenate(
+            [jnp.zeros((b, cw - 1, x.shape[-1]), x.dtype), xm], axis=1)
+        xw = jax.vmap(
+            lambda xr, st: lax.dynamic_slice_in_dim(xr, st, cw - 1, axis=0)
+        )(xp, last_idx.astype(jnp.int32) + 1)
+    xz = maybe_quantized_matmul(xw, p["in_proj"], quant, f"{name}.in_proj")
     tail = jnp.split(xz, 2, axis=-1)[0].astype(cache["conv"].dtype)
+    if last_idx is not None and mask is not None:
+        # rows gathered from the zero-pad region must stay exactly zero
+        rowpos = (last_idx[:, None].astype(jnp.int32)
+                  - jnp.arange(cw - 2, -1, -1, dtype=jnp.int32)[None, :])
+        tail = jnp.where(rowpos[:, :, None] >= 0, tail, 0)
     return out, {"conv": tail, "ssm": hT}
 
 

@@ -1,25 +1,48 @@
-"""Batched serving engine: prefill + decode with KV/recurrent caches.
+"""Continuous-batching serve engine: slot scheduler + prefill/decode jits.
 
-A minimal-but-real continuous-batching engine: requests are padded into a
-fixed batch, prefilled once, then decoded step-by-step with greedy or
-temperature sampling.  All matmuls ride the model's quantized KMM policy —
-this is the paper's deployment scenario (integer inference accelerator).
+The engine owns ``batch_size`` decode *slots* backed by one fixed-shape KV /
+recurrent cache.  Requests are admitted into freed slots as soon as they
+open — there is no group barrier, so a 1-token request next to a 64-token
+request costs one step, not sixty-four.  All matmuls ride the model's
+quantized KMM policy — this is the paper's deployment scenario (integer
+inference accelerator).
+
+Correctness on ragged prompts
+  Prompts are right-padded to a small set of fixed bucket lengths and
+  prefilled one request at a time with ``pad_mask``/``last_idx`` threaded
+  into :func:`repro.models.lm.prefill`, so RoPE positions, attention masks
+  and recurrent (mamba/rwkv) states are exact per request.  The prefilled
+  batch-1 cache is inserted into the request's slot; decode then runs the
+  whole slot batch with a per-slot position vector
+  (:func:`repro.models.lm.decode_step` with ``t: (B,)``).  Pad keys written
+  past a prompt's end are never attended: the causal mask excludes indices
+  above the slot's position and decode overwrites each index before it
+  becomes visible.
+
+Fixed shapes / no per-group retracing
+  One decode trace per engine (shapes ``(B,)``), one prefill trace per
+  prompt bucket (power-of-two lengths), one insert trace, two sampler
+  traces.  Admission order and per-(request, step) sampling keys make
+  output token-identical to sequential single-request generation, for
+  greedy and temperature sampling alike.
 
 Pass ``mesh=`` to serve sharded: params take the ``repro.dist.sharding``
-param rules, the per-group decode cache takes the cache rules (batch over
-``data``, kv-heads over ``model``), and prefill/decode jits run under the
-mesh so GSPMD partitions them (DESIGN.md §4.3).
+param rules, the slot cache takes the cache rules (slots over ``data``,
+kv-heads over ``model``), and prefill/decode jits run under the mesh so
+GSPMD partitions them (DESIGN.md §4.3).
 """
 from __future__ import annotations
 
 import contextlib
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import Mesh
 
 from repro.dist import sharding as dist_sharding
@@ -28,30 +51,81 @@ from repro.models.config import ModelConfig
 
 Params = Any
 
+MIN_BUCKET = 8
+
 
 @dataclass
 class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
     generated: List[int] = field(default_factory=list)
+    stats: Optional["RequestStats"] = None
+
+
+@dataclass
+class RequestStats:
+    rid: int
+    prompt_len: int
+    arrival_s: float
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+    n_tokens: int = 0
+    stop_reason: str = ""
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
 
 
 @dataclass
 class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    decode_steps: int = 0
+    decode_steps: int = 0          # batched engine steps
+    generated_tokens: int = 0      # actual tokens produced across requests
+    requests: List[RequestStats] = field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
-        return self.decode_steps / self.decode_s if self.decode_s else 0.0
+        """Serving throughput: *generated tokens* (counting every request in
+        flight — not engine steps) over total model time.  First tokens are
+        produced by prefill, so the denominator includes prefill_s; a
+        max_new_tokens=1 workload therefore still reports real throughput."""
+        busy = self.prefill_s + self.decode_s
+        return self.generated_tokens / busy if busy else 0.0
+
+
+class _Slot:
+    __slots__ = ("req", "pos", "last_tok", "rid", "n_tokens")
+
+    def __init__(self):
+        self.req: Optional[Request] = None
+        self.pos = 0          # next cache write index
+        self.last_tok = 0
+        self.rid = 0
+        self.n_tokens = 0     # tokens generated so far (sampling-key index)
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
 
 
 class Engine:
+    """Continuous-batching engine over ``batch_size`` decode slots."""
+
     def __init__(self, cfg: ModelConfig, params: Params, max_seq: int = 512,
                  batch_size: int = 4, rng_seed: int = 0,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 prompt_buckets: Optional[Sequence[int]] = None):
+        if cfg.is_encdec:
+            raise NotImplementedError(
+                "continuous batching does not support encoder-decoder models")
         self.cfg = cfg
         self.mesh = mesh
         if mesh is not None:
@@ -60,11 +134,64 @@ class Engine:
         self.params = params
         self.max_seq = max_seq
         self.batch = batch_size
-        self.key = jax.random.PRNGKey(rng_seed)
+        self._key = jax.random.PRNGKey(rng_seed)
+        if prompt_buckets is None:
+            prompt_buckets = []
+            b = MIN_BUCKET
+            while b < max_seq:
+                prompt_buckets.append(b)
+                b *= 2
+            prompt_buckets.append(max_seq)
+        self.prompt_buckets = tuple(sorted(set(prompt_buckets)))
+
+        self._slots = [_Slot() for _ in range(batch_size)]
+        self._pending: deque = deque()       # (req, arrival_s)
+        self._next_rid = 0
+        self._clock0 = time.monotonic()
+        self._stats = ServeStats()
+
+        with self._mesh_ctx():
+            self._cache = self._make_cache(batch_size)
+            # reusable zero-initialized batch-1 cache fed to every prefill
+            # (never donated, so it stays zero)
+            self._cache1 = lm.init_cache(cfg, 1, max_seq)
+
+        # Under a mesh, pin the cache output sharding to the canonical
+        # cache rules: otherwise GSPMD may pick a different layout for the
+        # decode/insert result than the input had, and the next call
+        # retraces (and silently resharded every step).
+        decode_out_sh = insert_out_sh = None
+        if mesh is not None:
+            cache_sh = dist_sharding.cache_sharding(
+                jax.eval_shape(lambda: lm.init_cache(cfg, batch_size,
+                                                     max_seq)),
+                mesh, batch=batch_size)
+            from jax.sharding import NamedSharding
+            logits_sh = NamedSharding(mesh, dist_sharding.batch_spec(mesh))
+            decode_out_sh = (logits_sh, cache_sh)
+            insert_out_sh = cache_sh
         self._decode = jax.jit(
-            lambda p, c, tok, t, mem: lm.decode_step(p, cfg, tok, c, t, mem=mem))
-        self._prefill = jax.jit(
-            lambda p, c, toks: lm.prefill(p, cfg, toks, c))
+            lambda p, c, tok, t: lm.decode_step(p, cfg, tok, c, t),
+            donate_argnums=(1,), out_shardings=decode_out_sh)
+        self._insert = jax.jit(
+            lambda big, small, slot: jax.tree.map(
+                lambda bl, sl: lax.dynamic_update_slice_in_dim(
+                    bl, sl.astype(bl.dtype), slot, axis=1), big, small),
+            donate_argnums=(0,), out_shardings=insert_out_sh)
+        def prefill(p, cache1, toks, last):
+            iota = jnp.arange(toks.shape[1], dtype=jnp.int32)[None, :]
+            mask = iota <= last[:, None]
+            logits, cache1, _ = lm.prefill(p, cfg, toks, cache1,
+                                           pad_mask=mask, last_idx=last)
+            return logits, cache1
+
+        # one jitted prefill: jax.jit's shape-keyed cache gives exactly one
+        # trace per prompt bucket
+        self._prefill = jax.jit(prefill)
+        self._sample = jax.jit(self._sample_fn)
+        self._admitted_done: List[Request] = []
+
+    # -- infrastructure -----------------------------------------------------
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
@@ -77,51 +204,207 @@ class Engine:
                 dist_sharding.cache_sharding(cache, self.mesh, batch=b))
         return cache
 
-    def generate(self, requests: List[Request]) -> ServeStats:
-        cfg = self.cfg
-        stats = ServeStats()
-        for group_start in range(0, len(requests), self.batch):
-            group = requests[group_start:group_start + self.batch]
-            self._generate_group(group, stats)
-        return stats
+    def _now(self) -> float:
+        return time.monotonic() - self._clock0
 
-    def _generate_group(self, group: List[Request], stats: ServeStats):
-        cfg = self.cfg
-        b = len(group)
-        plen = max(len(r.prompt) for r in group)
-        toks = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(group):
-            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        cache = self._make_cache(b)
+    def _bucket(self, n: int) -> int:
+        for b in self.prompt_buckets:
+            if b >= n:
+                return b
+        raise ValueError(f"prompt length {n} exceeds max bucket "
+                         f"{self.prompt_buckets[-1]}")
+
+    def _sample_fn(self, key, logits, temps, rids, steps):
+        def one(lg, tmp, rid, st):
+            k = jax.random.fold_in(jax.random.fold_in(key, rid), st)
+            scaled = lg.astype(jnp.float32) / jnp.maximum(tmp, 1e-6)
+            sampled = jax.random.categorical(k, scaled)
+            return jnp.where(tmp > 0, sampled.astype(jnp.int32),
+                             jnp.argmax(lg).astype(jnp.int32))
+
+        return jax.vmap(one)(logits, temps, rids, steps)
+
+    def n_traces(self) -> Dict[str, int]:
+        """Compiled-trace counts (retrace monitoring for the serve bench);
+        -1 per entry if the jax version doesn't expose cache sizes."""
+
+        def size(fn) -> int:
+            get = getattr(fn, "_cache_size", None)
+            return int(get()) if callable(get) else -1
+
+        return {
+            "decode": size(self._decode),
+            "prefill": size(self._prefill),
+            "insert": size(self._insert),
+        }
+
+    # -- scheduling ---------------------------------------------------------
+
+    def submit(self, req: Request, arrival_s: Optional[float] = None):
+        """Enqueue a request; it is admitted when a slot frees up."""
+        if req.max_new_tokens < 1:
+            # the first token is sampled from the prefill logits at
+            # admission, so a zero budget cannot be honored
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
+                f"exceeds max_seq={self.max_seq}")
+        if len(req.prompt) > self.prompt_buckets[-1]:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} exceeds max prompt "
+                f"bucket {self.prompt_buckets[-1]}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req.stats = RequestStats(
+            rid=rid, prompt_len=len(req.prompt),
+            arrival_s=self._now() if arrival_s is None else arrival_s)
+        req.generated = []
+        self._pending.append(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for s in self._slots if s.active)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    def _finish(self, slot: _Slot, reason: str):
+        req = slot.req
+        req.stats.finish_s = self._now()
+        req.stats.n_tokens = len(req.generated)
+        req.stats.stop_reason = reason
+        self._stats.requests.append(req.stats)
+        slot.req = None
+
+    def _check_done(self, slot: _Slot, tok: int) -> Optional[str]:
+        req = slot.req
+        if tok in req.stop_tokens:
+            return "stop_token"
+        if len(req.generated) >= req.max_new_tokens:
+            return "length"
+        if slot.pos >= self.max_seq:
+            return "max_seq"
+        return None
+
+    def _admit_one(self, slot_idx: int, req: Request):
+        """Prefill a request into a free slot; samples its first token."""
+        slot = self._slots[slot_idx]
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt                       # right-pad
+        last = np.array([plen - 1], np.int32)
+        stats = self._stats
         with self._mesh_ctx():
-            t0 = time.time()
-            logits, cache, mem = self._prefill(self.params, cache,
-                                               jnp.asarray(toks))
-            logits.block_until_ready()
-            stats.prefill_s += time.time() - t0
-            max_new = max(r.max_new_tokens for r in group)
-            pos = plen
-            t0 = time.time()
-            for step in range(max_new):
-                next_tok = self._sample(logits, group)
-                for i, r in enumerate(group):
-                    if step < r.max_new_tokens:
-                        r.generated.append(int(next_tok[i]))
-                logits, cache = self._decode(self.params, cache,
-                                             jnp.asarray(next_tok),
-                                             jnp.int32(pos), mem)
-                pos += 1
-                stats.decode_steps += 1
-            jax.block_until_ready(logits)
-            stats.decode_s += time.time() - t0
+            t0 = time.monotonic()
+            logits, cache1 = self._prefill(
+                self.params, self._cache1, jnp.asarray(toks),
+                jnp.asarray(last))
+            self._cache = self._insert(self._cache, cache1,
+                                       jnp.int32(slot_idx))
+            tok = self._sample(
+                self._key, logits,
+                jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.stats.rid], jnp.int32),
+                jnp.asarray([0], jnp.int32))
+            tok = int(np.asarray(tok)[0])
+            stats.prefill_s += time.monotonic() - t0
+        slot.req = req
+        slot.pos = plen
+        slot.last_tok = tok
+        slot.rid = req.stats.rid
+        slot.n_tokens = 1
+        req.generated.append(tok)
+        req.stats.first_token_s = self._now()
+        stats.generated_tokens += 1
+        reason = self._check_done(slot, tok)
+        if reason is not None:      # e.g. max_new_tokens=1 or instant EOS
+            self._finish(slot, reason)
+            self._admitted_done.append(req)
 
-    def _sample(self, logits: jax.Array, group: List[Request]) -> np.ndarray:
-        temps = np.array([r.temperature for r in group], np.float32)
-        if (temps == 0).all():
-            return np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-        self.key, sub = jax.random.split(self.key)
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
-        sampled = jax.random.categorical(sub, scaled, axis=-1)
-        greedy = jnp.argmax(logits, -1)
-        out = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
-        return np.asarray(out).astype(np.int32)
+    def _admit(self):
+        while self._pending:
+            if self._pending[0].stats.arrival_s > self._now():
+                break                     # respects a future arrival trace
+            free = next((i for i, s in enumerate(self._slots)
+                         if not s.active), None)
+            if free is None:
+                break
+            self._admit_one(free, self._pending.popleft())
+
+    def step(self) -> List[Request]:
+        """Admit what fits, then run one batched decode step.
+
+        Returns the requests that finished during this step — including
+        those that finished at admission (first prefill token hit EOS or a
+        1-token budget)."""
+        self._admit()
+        finished: List[Request] = self._admitted_done
+        self._admitted_done = []
+        active = [s for s in self._slots if s.active]
+        if not active:
+            return finished
+        toks = np.array([s.last_tok for s in self._slots], np.int32)
+        # park inactive slots at their current position (their lane still
+        # computes, but writes land in a dead slot that admission overwrites)
+        pos = np.array([min(s.pos, self.max_seq - 1) for s in self._slots],
+                       np.int32)
+        temps = np.array(
+            [s.req.temperature if s.active else 0.0 for s in self._slots],
+            np.float32)
+        rids = np.array([s.rid for s in self._slots], np.int32)
+        steps = np.array([s.n_tokens for s in self._slots], np.int32)
+        stats = self._stats
+        t0 = time.monotonic()
+        with self._mesh_ctx():
+            logits, self._cache = self._decode(
+                self.params, self._cache, jnp.asarray(toks), jnp.asarray(pos))
+            nxt = np.asarray(self._sample(
+                self._key, logits, jnp.asarray(temps), jnp.asarray(rids),
+                jnp.asarray(steps)))
+        stats.decode_s += time.monotonic() - t0
+        stats.decode_steps += 1
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            tok = int(nxt[i])
+            slot.pos += 1
+            slot.last_tok = tok
+            slot.n_tokens += 1
+            slot.req.generated.append(tok)
+            stats.generated_tokens += 1
+            reason = self._check_done(slot, tok)
+            if reason is not None:
+                req = slot.req
+                self._finish(slot, reason)
+                finished.append(req)
+        return finished
+
+    # -- batch driver -------------------------------------------------------
+
+    def generate(self, requests: List[Request],
+                 arrival_s: Optional[Sequence[float]] = None) -> ServeStats:
+        """Serve ``requests`` to completion; fills ``req.generated`` and
+        returns the run's :class:`ServeStats`.
+
+        ``arrival_s`` (optional, seconds relative to now) replays an arrival
+        trace: a request is only admitted once its arrival time has passed
+        (TTFT then includes queueing delay)."""
+        self._stats = ServeStats()
+        self._clock0 = time.monotonic()
+        if arrival_s is None:
+            for r in requests:
+                self.submit(r)
+        else:
+            order = sorted(range(len(requests)), key=lambda i: arrival_s[i])
+            for i in order:
+                self.submit(requests[i], arrival_s=float(arrival_s[i]))
+        while self._pending or self.num_active:
+            if not self.num_active and self._pending:
+                wait = self._pending[0].stats.arrival_s - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.01))
+            self.step()
+        return self._stats

@@ -40,6 +40,7 @@ class TestWkvKernel:
 
 
 class TestPrequant:
+    @pytest.mark.slow
     def test_prequant_matches_dynamic_path(self):
         from repro.configs import get_config
         from repro.models import lm

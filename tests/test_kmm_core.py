@@ -69,6 +69,7 @@ def test_digit_split_identity():
         assert (np.asarray(lo) >= 0).all() and (np.asarray(lo) < 2**h).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(
     w=st.integers(4, 14),
@@ -151,6 +152,42 @@ def test_max_exact_k():
     assert max_exact_k(8) == 2**15
     assert max_exact_k(14) == 2**3
     assert max_exact_k(16) == 0
+
+
+@pytest.mark.parametrize("w", [11, 12, 13, 14])
+def test_max_exact_k_boundary_brute_force(w):
+    """For w >= 11 the bound K = 2**(31-2w) is tight: all-max unsigned w-bit operands
+    are exact at K for both KMM and MM (the Karatsuba ``cs - c1 - c0``
+    branch is dominated by the recombined output, see ``max_exact_k``), and
+    KMM at K+1 overflows the int32 carrier."""
+    k = max_exact_k(w)
+    hi = 2**w - 1
+
+    def worst(kk):
+        a = np.full((3, kk), hi, np.int32)
+        b = np.full((kk, 2), hi, np.int32)
+        return a, b
+
+    a, b = worst(k)
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    assert ref.max() < 2**31            # the bound's whole claim
+    for fn in (kmm_n, mm_n):
+        out = np.asarray(fn(jnp.array(a), jnp.array(b), w=w, n=2))
+        np.testing.assert_array_equal(out.astype(np.int64), ref,
+                                      err_msg=f"{fn.__name__} w={w} K={k}")
+    # random operands at the boundary K are exact too
+    rng = np.random.default_rng(w)
+    a = _rand(rng, 0, 2**w, (5, k))
+    b = _rand(rng, 0, 2**w, (k, 4))
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    out = np.asarray(kmm_n(jnp.array(a), jnp.array(b), w=w, n=2))
+    np.testing.assert_array_equal(out.astype(np.int64), ref)
+    # K+1 overflows: the true product exceeds int32 and the carrier wraps
+    a, b = worst(k + 1)
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    assert ref.max() >= 2**31
+    out = np.asarray(kmm_n(jnp.array(a), jnp.array(b), w=w, n=2))
+    assert not np.array_equal(out.astype(np.int64), ref)
 
 
 def test_kmm_float_combine_close():

@@ -78,6 +78,7 @@ def test_disabled_quant_is_plain_matmul():
                                np.asarray(ref, np.float32), rtol=1e-2)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(bits=st.integers(6, 14), m_dim=st.integers(1, 16),
        k_dim=st.integers(8, 64), seed=st.integers(0, 2**31 - 1))

@@ -119,6 +119,24 @@ with mesh:
         p2, cache, jnp.zeros((8,), jnp.int32), jnp.int32(3))
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
+# ---- continuous-batching engine on the 2x4 mesh ------------------------------
+from repro.serve.engine import Engine, Request
+
+def serve(mesh_arg):
+    rng2 = np.random.default_rng(7)
+    reqs = [Request(prompt=list(rng2.integers(1, cfg.vocab_size, size=int(n))),
+                    max_new_tokens=int(m))
+            for n, m in zip(rng2.integers(2, 9, size=10),
+                            rng2.integers(1, 5, size=10))]
+    eng = Engine(cfg, jax.device_get(p2), max_seq=32, batch_size=8,
+                 mesh=mesh_arg)   # p2: post-step params (params was donated)
+    stats = eng.generate(reqs)
+    assert eng.n_traces()["decode"] in (1, -1), eng.n_traces()
+    return [r.generated for r in reqs]
+
+sharded_out = serve(mesh)
+assert sharded_out == serve(None), (sharded_out, serve(None))
+
 print("SHARDED-OK")
 """
 

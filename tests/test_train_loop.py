@@ -21,6 +21,7 @@ def _data_cfg(cfg, seq=64, gb=4):
                       encdec=cfg.is_encdec, seed=3)
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     cfg = get_config("llama3.2-1b", smoke=True)
     mesh = single_device_mesh()
@@ -32,6 +33,7 @@ def test_loss_decreases():
     assert losses[-1] < losses[0] - 0.5, losses
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_bit_exact(tmp_path):
     """train 10 straight == train 5, crash, resume 5 (same data, same opt)."""
     cfg = get_config("llama3.2-1b", smoke=True)
@@ -54,6 +56,7 @@ def test_checkpoint_restart_bit_exact(tmp_path):
     assert r1.losses[9] == pytest.approx(r3.losses[9], rel=1e-5)
 
 
+@pytest.mark.slow
 def test_fault_injection_then_resume(tmp_path):
     cfg = get_config("llama3.2-1b", smoke=True)
     mesh = single_device_mesh()
@@ -78,6 +81,7 @@ def test_fault_injection_then_resume(tmp_path):
     assert r.final_step == 12
 
 
+@pytest.mark.slow
 def test_microbatching_gradient_equivalent():
     """k microbatches give the same update as one fused batch (mean grad).
 
@@ -120,6 +124,7 @@ def test_microbatching_gradient_equivalent():
     assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
 
 
+@pytest.mark.slow
 def test_straggler_watchdog():
     import time
 
