@@ -4,13 +4,23 @@ wall-time microbench and the dry-run roofline table.
     PYTHONPATH=src python -m benchmarks.run [--skip-walltime]
 
 Prints ``name,us_per_call,derived`` CSV rows followed by CHECK lines that
-assert the paper's claims against our implementation.
+assert the paper's claims against our implementation, and writes one
+machine-readable ``BENCH_<group>.json`` per benchmark group (paper_tables /
+walltime / serve / roofline) at the repo root so the perf trajectory —
+tokens/s, TTFT, GEMM wall-times — is tracked across PRs.
+
+``--tuning-table tuned/default.json`` installs a repro.tune kernel
+variant/tile table before any benchmark runs (see DESIGN.md §10).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _emit(rows, checks, csv_lines, check_lines):
@@ -28,40 +38,79 @@ def _emit(rows, checks, csv_lines, check_lines):
             + (f" [{detail}]" if detail else ""))
 
 
+def write_bench_json(group: str, rows, checks, out_dir: str) -> str:
+    """Persist one benchmark group as BENCH_<group>.json (machine-readable:
+    every row dict verbatim — tokens/s, TTFT percentiles, GEMM us_per_call —
+    plus the CHECK verdicts)."""
+    doc = {
+        "bench": group,
+        "rows": list(rows),
+        "checks": [{"claim": c, "ok": bool(ok), "detail": d}
+                   for c, ok, d in checks],
+    }
+    path = os.path.join(out_dir, f"BENCH_{group}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-walltime", action="store_true")
     ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--json-dir", default=REPO_ROOT,
+                    help="where BENCH_<group>.json files land "
+                         "(default: repo root)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<group>.json files")
+    ap.add_argument("--tuning-table", default=None,
+                    help="repro.tune table JSON to install before running")
     args = ap.parse_args()
+
+    if args.tuning_table:
+        from repro.tune import set_active_table
+        set_active_table(args.tuning_table)
 
     from benchmarks import bench_roofline, bench_serve, bench_walltime, \
         paper_tables
 
     csv_lines = ["name,us_per_call,derived"]
     check_lines = []
+    json_paths = []
+
+    def record(group, rows, checks):
+        _emit(rows, checks, csv_lines, check_lines)
+        if not args.no_json:
+            json_paths.append(write_bench_json(group, rows, checks,
+                                               args.json_dir))
 
     t0 = time.time()
+    pt_rows, pt_checks = [], []
     for fn in (paper_tables.fig5, paper_tables.fig11, paper_tables.fig12,
                paper_tables.table1, paper_tables.table2, paper_tables.table3):
         rows, checks = fn()
-        _emit(rows, checks, csv_lines, check_lines)
+        pt_rows.extend(rows)
+        pt_checks.extend(checks)
+    record("paper_tables", pt_rows, pt_checks)
 
     if not args.skip_walltime:
         rows = bench_walltime.run()
-        _emit(rows, bench_walltime.checks(rows), csv_lines, check_lines)
+        record("walltime", rows, bench_walltime.checks(rows))
 
     if not args.skip_serve:
         rows = bench_serve.run()
-        _emit(rows, bench_serve.checks(rows), csv_lines, check_lines)
+        record("serve", rows, bench_serve.checks(rows))
 
-    roof_rows = bench_roofline.run(args.dryrun_dir)
-    _emit(roof_rows, [], csv_lines, check_lines)
+    record("roofline", bench_roofline.run(args.dryrun_dir), [])
 
     print("\n".join(csv_lines))
     print()
     print("\n".join(check_lines))
     n_fail = sum(1 for line in check_lines if "FAIL" in line)
+    for p in json_paths:
+        print(f"wrote {p}")
     print(f"\n{len(check_lines) - n_fail}/{len(check_lines)} checks passed "
           f"({time.time() - t0:.1f}s)")
     if n_fail:

@@ -14,9 +14,10 @@ KMM halves the width (+1 carry bit) until digits fit the multiplier.
 from __future__ import annotations
 
 import enum
+import functools
 import math
-from dataclasses import dataclass
-from typing import List
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
 
 
 class Mode(enum.Enum):
@@ -44,7 +45,21 @@ class Plan:
 
 
 def select_mode(w: int, m: int = 8) -> Plan:
-    """The paper's single-level dispatch rule (Fig. 10 modes)."""
+    """The paper's single-level dispatch rule (Fig. 10 modes).
+
+    The ``w == 2m - 1`` boundary deliberately lands in MM2, not KMM2: at
+    ``w = 2m - 1`` the digit split is ``h = ceil(w/2) = m``, so the Karatsuba
+    pre-adder outputs ``As = A1 + A0`` need ``m + 1`` bits and no longer fit
+    the ``m``-bit multiplier operands — the KMM2 window closes at ``2m - 2``
+    (the paper's Fig. 10 rule) and the conventional 4-product MM2 covers
+    ``2m - 1`` and ``2m``.  This is correct-by-construction, not a silent
+    fallback; tests pin it (``test_w_2m_minus_1_boundary_is_mm2``).
+    """
+    if m < 2:
+        raise ValueError(
+            f"multiplier bitwidth m must be >= 2, got m={m}: with m < 2 the "
+            f"dispatch windows collapse (KMM2's 'm < w <= 2m - 2' band is "
+            f"empty and digit splitting cannot produce m-bit operands)")
     if w < 1:
         raise ValueError(f"bitwidth must be >= 1, got {w}")
     if w <= m:
@@ -97,3 +112,184 @@ def efficiency_roof(w: int, m: int) -> float:
 def schedule(widths: List[int], m: int = 8) -> List[Plan]:
     """Plan a mixed-precision workload (one Plan per layer bitwidth)."""
     return [select_mode(w, m) for w in widths]
+
+
+# ---------------------------------------------------------------------------
+# Execution plans + table-backed selection (repro.tune registry seam).
+# ---------------------------------------------------------------------------
+
+# Kernel variants the tuner can pick between.  "mm1"/"kmm2"/"mm2" are the
+# paper's modes (executed on the Pallas kernels or the XLA digit recursion
+# depending on ``backend``); "xla_ref" is a single fused int32 dot_general
+# (valid only within the int32 headroom bound); "ffip" is the literal
+# free-pipeline inner-product reference (tiny shapes only).
+VARIANTS = ("mm1", "kmm2", "mm2", "xla_ref", "ffip")
+
+_EXACT_VARIANTS = ("mm1", "xla_ref", "ffip")  # integer core, no fp32 combine
+
+
+@dataclass(frozen=True)
+class ExecPlan:
+    """A fully-resolved way to execute one integer GEMM.
+
+    Where :class:`Plan` is the paper's analytic mode decision (bitwidth ->
+    mode), an ``ExecPlan`` adds everything the software stack needs to *run*
+    it: kernel variant, execution backend, tile sizes, combine precision and
+    digit-recursion depth.  Frozen + hashable so it can be a jit static arg.
+    """
+
+    variant: str                 # one of VARIANTS
+    w: int                       # input bitwidth
+    m: int = 8                   # multiplier bitwidth
+    backend: str = "xla"         # "xla" | "pallas" (digit variants only)
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 256
+    combine_int32: bool = False  # int32 post-adder (exact) vs fp32
+    depth: int = 1               # digit-recursion levels (digits = 2**depth)
+    source: str = "analytic"     # "analytic" | "table" | "prior" (+notes)
+
+    @property
+    def digits(self) -> int:
+        return 2 ** self.depth if self.variant in ("kmm2", "mm2") else 1
+
+    @property
+    def mode(self) -> Optional[Mode]:
+        if self.variant == "kmm2":
+            return Mode.KMM2
+        if self.variant == "mm2":
+            return Mode.MM2
+        if self.variant in ("mm1", "xla_ref"):
+            return Mode.MM1
+        return None
+
+    @property
+    def tiles(self) -> Tuple[int, int, int]:
+        return (self.block_m, self.block_n, self.block_k)
+
+    @property
+    def is_exact_int(self) -> bool:
+        """True when the plan computes the mathematically exact integer
+        product in int32 (validity-checked against ``max_exact_k``)."""
+        return self.combine_int32 or self.variant in _EXACT_VARIANTS
+
+
+def numerics_fingerprint(plan: ExecPlan):
+    """Two plans with equal fingerprints produce bit-identical outputs on the
+    same operands (given both pass validity).  Exact-int plans all compute
+    the same integer; fp32-combine plans are keyed by everything that changes
+    rounding: variant, recursion depth and backend (the Pallas path runs on
+    centered digit planes + zero-point correction, the XLA path on raw
+    digits — same value, different fp32 rounding)."""
+    if plan.is_exact_int:
+        return ("exact",)
+    return ("fp32", plan.variant, plan.depth, plan.backend)
+
+
+DEFAULT_TILES = (128, 128, 256)
+
+
+def analytic_plan(w: int, m: int = 8, *, backend: str = "xla",
+                  exact: bool = False) -> ExecPlan:
+    """The paper's dispatch rule as an ExecPlan with default tiles."""
+    plan = select_mode(w, m)
+    bm, bn, bk = DEFAULT_TILES
+    return ExecPlan(variant=plan.mode.value, w=w, m=m, backend=backend,
+                    block_m=bm, block_n=bn, block_k=bk,
+                    combine_int32=exact, depth=max(plan.recursion, 1)
+                    if plan.mode is not Mode.MM1 else 0)
+
+
+def _padded(dim: int, block: int) -> int:
+    return -(-dim // block) * block
+
+
+def select_plan(shape: Tuple[int, int, int], w: int, *, m: int = 8,
+                backend: str = "xla", exact: bool = False,
+                table=None, pin_numerics: bool = True) -> ExecPlan:
+    """Table-backed execution-plan selection for an (M, K, N) integer GEMM.
+
+    Resolution order:
+
+      1. no active tuning table  -> the paper's analytic rule + default tiles
+         (exactly the pre-``repro.tune`` behaviour);
+      2. active table with a measured entry for this (backend, bucketed
+         M/N/K, w) key -> the recorded winner, *validated* against the search
+         space's pruning rules (``max_exact_k`` int32-headroom, s8 digit
+         bounds, tile sanity) — an invalid entry is discarded, never run;
+      3. active table without an entry -> the cost-model prior from
+         :mod:`repro.core.complexity` ranks the pruned space.
+
+    ``pin_numerics`` (the default, used by every model-facing path)
+    guarantees the returned plan is numerics-identical to the analytic rule:
+    a table may swap variant/depth only inside the same
+    :func:`numerics_fingerprint` class (e.g. between exact-int32 variants);
+    otherwise only tile sizes are adopted — and on the fp32 Pallas path tiles
+    are adopted only when they imply the same zero-padding, since padded-K
+    fp32 correction terms round differently.  Tuning therefore never changes
+    ``quantized_matmul`` results, only how fast they are computed.
+    """
+    base = analytic_plan(w, m, backend=backend, exact=exact)
+    if table is None:
+        from repro.tune import table as tune_table   # lazy: core must not
+        table = tune_table.get_active_table()        # hard-depend on tune
+    if table is None:
+        return base
+    from repro.tune import space as tune_space
+    entry = table.lookup(backend, shape, w, m)
+    source = "table"
+    if entry is None:
+        entry = _prior_plan_cached(tune_space.bucket_shape(shape), w, m,
+                                   backend, exact)
+        source = "prior"
+    if entry is None:
+        return base
+    entry = replace(entry, w=w, m=m, backend=backend, source=source)
+    if tune_space.validate(entry, shape) is not None:
+        return base                      # never run a candidate that fails
+    if not pin_numerics:
+        return entry
+    if (numerics_fingerprint(entry) == numerics_fingerprint(base)
+            and _k_padding_matches(shape, base, entry)):
+        return entry
+    # Numerics differ (or the fp32-Pallas K padding would change): adopt
+    # tiles only, and only when the entry actually measured tiles — an
+    # xla_ref / ffip / xla-backend winner's recorded tiles are meaningless
+    # defaults, so keep the analytic plan wholesale.
+    if entry.variant not in ("mm1", "kmm2", "mm2") \
+            or entry.backend != "pallas":
+        return base
+    if not _k_padding_matches(shape, base,
+                              replace(base, block_k=entry.block_k)):
+        return base
+    return replace(base, block_m=entry.block_m, block_n=entry.block_n,
+                   block_k=entry.block_k, source=source + "+tiles")
+
+
+@functools.lru_cache(maxsize=4096)
+def _prior_plan_cached(bucket: Tuple[int, int, int], w: int, m: int,
+                       backend: str, exact: bool) -> Optional[ExecPlan]:
+    """Memoized cost-model prior per bucketed key: a table miss would
+    otherwise enumerate + rank the full candidate space at trace time for
+    every GEMM call site.  Keyed on the bucketed shape (the same key the
+    table uses); the returned plan is still re-validated against the real
+    runtime shape in select_plan.  Safe across table swaps — the prior
+    doesn't depend on table contents."""
+    from repro.tune import space as tune_space
+    return tune_space.prior_plan(bucket, w, m=m, backend=backend,
+                                 exact=exact)
+
+
+def _k_padding_matches(shape, base: ExecPlan, entry: ExecPlan) -> bool:
+    """On the fp32-combine Pallas path the result depends on the *padded*
+    contraction length: zero-padded K rows contribute centered digit planes
+    and the ``z*z*kp`` correction term, which cancel exactly in real
+    arithmetic but round differently in fp32 once accumulators pass 2**24.
+    Bit-identity with the analytic default therefore requires the same
+    padded K.  M/N padding is irrelevant (padded rows/cols are sliced away
+    and never enter retained outputs), and exact-int plans equal the true
+    product for any padding."""
+    if entry.is_exact_int or entry.backend != "pallas":
+        return True
+    k = shape[1]
+    return _padded(k, base.block_k) == _padded(k, entry.block_k)

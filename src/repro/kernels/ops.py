@@ -7,6 +7,15 @@ kernels (``backend="pallas"``) or plain XLA dot_generals (``backend="xla"``,
 the default — used inside pjit'd model code so SPMD partitioning and the
 dry-run cost analysis see ordinary dots).
 
+Execution is plan-driven: :func:`repro.core.dispatch.select_plan` resolves an
+:class:`~repro.core.dispatch.ExecPlan` (variant, tiles, combine precision,
+recursion depth) — from the paper's analytic rule by default, or from the
+active :mod:`repro.tune` table when one is installed — and :func:`run_plan`
+executes it.  ``run_plan(..., use_ref_kernels=True)`` swaps the Pallas digit
+kernels for their pure-jnp mirrors in :mod:`repro.kernels.ref` while keeping
+the padding/correction wrapper identical, which is the bit-exact oracle the
+autotuner checks every candidate against.
+
 Digit handling for the Pallas path (see kmm_gemm.py): split at h = ceil(w/2),
 center the low digit by z = 2^(h-1) so all planes are s8, then fold the
 centering back with the paper's zero-point-adjuster correction:
@@ -23,13 +32,14 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.dispatch import Mode, select_mode
+from repro.core.dispatch import ExecPlan, Mode, select_plan
 from repro.core.kmm import kmm_n, mm_n, max_exact_k
+from repro.kernels.ffip import ffip_gemm_literal
 from repro.kernels.kmm_gemm import kmm2_gemm_planes
 from repro.kernels.mm1_gemm import mm1_gemm
 from repro.kernels.mm2_gemm import mm2_gemm_planes
+from repro.kernels.ref import ref_int_gemm, ref_kmm2_planes, ref_mm2_planes
 
 Array = jax.Array
 
@@ -58,67 +68,124 @@ def int_gemm(
     m: int = 8,
     backend: str = "xla",
     exact: bool = False,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 256,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
+    plan: Optional[ExecPlan] = None,
 ) -> Array:
     """Integer GEMM with precision-scalable dispatch (paper Fig. 10).
 
     a: (M, K) signed w-bit values in an integer dtype; b: (K, N) likewise.
     Returns float32 (or int32 when ``exact=True``, which asserts the int32
     exactness bound 2w + log2(K) + 2 <= 31 and uses integer combines).
+
+    Tile sizes default to the active tuning table's winner for this
+    (backend, M/N/K bucket, w) key — or (128, 128, 256) when no table is
+    installed; explicit ``block_*`` arguments always win.  ``plan`` bypasses
+    selection entirely and executes the given :class:`ExecPlan` (the
+    autotuner's entry point).
     """
-    plan = select_mode(w, m)
-    k_dim = a.shape[-1]
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
     if exact and max_exact_k(w) < k_dim:
         raise ValueError(
             f"exact int32 output impossible for w={w}, K={k_dim}; "
             f"max exact K is {max_exact_k(w)}")
-    if backend == "xla":
-        return _int_gemm_xla(a, b, plan=plan, exact=exact)
-    if backend == "pallas":
-        return _int_gemm_pallas(
-            a, b, plan=plan, exact=exact, block_m=block_m, block_n=block_n,
-            block_k=block_k, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+    if plan is None:
+        plan = select_plan((m_dim, k_dim, n_dim), w, m=m, backend=backend,
+                           exact=exact)
+        overrides = {k: v for k, v in (("block_m", block_m),
+                                       ("block_n", block_n),
+                                       ("block_k", block_k)) if v is not None}
+        if overrides:
+            import dataclasses
+            plan = dataclasses.replace(plan, **overrides)
+    out = run_plan(a, b, plan=plan, interpret=interpret)
+    if exact:
+        return out
+    return out if out.dtype == jnp.float32 else out.astype(jnp.float32)
 
 
-def _int_gemm_xla(a: Array, b: Array, *, plan, exact: bool) -> Array:
-    combine = jnp.int32 if exact else jnp.float32
+def run_plan(a: Array, b: Array, *, plan: ExecPlan,
+             interpret: Optional[bool] = None,
+             use_ref_kernels: bool = False) -> Array:
+    """Execute one :class:`ExecPlan` on (M, K) x (K, N) integer operands.
+
+    Output dtype follows the plan: int32 for exact-int plans
+    (``plan.is_exact_int``), float32 for fp32-combine plans.
+    ``use_ref_kernels`` routes the digit-plane products through the pure-jnp
+    mirrors in :mod:`repro.kernels.ref` instead of the Pallas kernels —
+    identical padding/correction wrapper, bit-identical result — giving the
+    tuner its correctness oracle.
+    """
+    if plan.variant == "xla_ref":
+        return ref_int_gemm(a, b)
+    if plan.variant == "ffip":
+        return ffip_gemm_literal(a, b)
+    if plan.backend == "xla":
+        return _int_gemm_xla(a, b, plan=plan)
+    return _int_gemm_pallas(a, b, plan=plan, interpret=interpret,
+                            use_ref_kernels=use_ref_kernels)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("plan", "interpret", "use_ref_kernels"))
+def run_plan_jit(a: Array, b: Array, plan: ExecPlan,
+                 interpret: Optional[bool] = None,
+                 use_ref_kernels: bool = False) -> Array:
+    """jit'd :func:`run_plan` (ExecPlan is frozen/hashable, so it is a
+    static arg — one trace per plan)."""
+    return run_plan(a, b, plan=plan, interpret=interpret,
+                    use_ref_kernels=use_ref_kernels)
+
+
+def _int_gemm_xla(a: Array, b: Array, *, plan: ExecPlan) -> Array:
+    combine = jnp.int32 if plan.combine_int32 else jnp.float32
     ai, bi = a.astype(jnp.int32), b.astype(jnp.int32)
     if plan.mode is Mode.MM1:
-        out = jax.lax.dot_general(ai, bi, (((1,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        return out if exact else out.astype(jnp.float32)
+        return jax.lax.dot_general(ai, bi, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
     fn = kmm_n if plan.mode is Mode.KMM2 else mm_n
     return fn(ai, bi, w=plan.w, n=plan.digits, combine_dtype=combine)
 
 
-def _int_gemm_pallas(a: Array, b: Array, *, plan, exact: bool,
-                     block_m: int, block_n: int, block_k: int,
-                     interpret: Optional[bool]) -> Array:
+def _int_gemm_pallas(a: Array, b: Array, *, plan: ExecPlan,
+                     interpret: Optional[bool],
+                     use_ref_kernels: bool = False) -> Array:
     m_dim, k_dim = a.shape
     n_dim = b.shape[1]
+    block_m, block_n, block_k = plan.tiles
+    exact = plan.combine_int32
     a = _pad_to(a.astype(jnp.int32), block_m, block_k)
     b = _pad_to(b.astype(jnp.int32), block_k, block_n)
     kp = a.shape[1]
     if plan.mode is Mode.MM1:
-        out = mm1_gemm(a.astype(jnp.int8), b.astype(jnp.int8),
-                       block_m=block_m, block_n=block_n, block_k=block_k,
-                       interpret=interpret)
-        out = out[:m_dim, :n_dim]
-        return out if exact else out.astype(jnp.float32)
-    if plan.recursion > 1:
+        if use_ref_kernels:
+            out = ref_int_gemm(a.astype(jnp.int8), b.astype(jnp.int8))
+        else:
+            out = mm1_gemm(a.astype(jnp.int8), b.astype(jnp.int8),
+                           block_m=block_m, block_n=block_n, block_k=block_k,
+                           interpret=interpret)
+        return out[:m_dim, :n_dim]
+    if plan.depth > 1:
         raise NotImplementedError(
             "pallas backend implements single-level KMM2/MM2 (w <= 16); "
             "use backend='xla' for deeper recursion")
     h = -(-plan.w // 2)
     a1, a0, z = _planes(a, h)
     b1, b0, _ = _planes(b, h)
-    kernel = kmm2_gemm_planes if plan.mode is Mode.KMM2 else mm2_gemm_planes
-    core = kernel(a1, a0, b1, b0, h=h, block_m=block_m, block_n=block_n,
-                  block_k=block_k, combine_int32=exact, interpret=interpret)
+    if use_ref_kernels:
+        ref = ref_kmm2_planes if plan.mode is Mode.KMM2 else ref_mm2_planes
+        core = ref(a1, a0, b1, b0, h=h, combine_int32=exact)
+    else:
+        kernel = kmm2_gemm_planes if plan.mode is Mode.KMM2 \
+            else mm2_gemm_planes
+        core = kernel(a1, a0, b1, b0, h=h, block_m=block_m, block_n=block_n,
+                      block_k=block_k, combine_int32=exact,
+                      interpret=interpret)
     # Zero-point adjuster (paper Section IV-D / prior work [6]).
     abar = (a1.astype(jnp.int32) << h) + a0.astype(jnp.int32)
     bbar = (b1.astype(jnp.int32) << h) + b0.astype(jnp.int32)

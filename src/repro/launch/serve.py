@@ -30,6 +30,8 @@ def main() -> int:
                     help="arrival rate in req/s (0: all at once)")
     ap.add_argument("--full-size", action="store_true",
                     help="full config (needs real accelerators)")
+    ap.add_argument("--tuning-table", default=None,
+                    help="repro.tune table JSON (DESIGN.md §10)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -38,7 +40,8 @@ def main() -> int:
 
     cfg = get_config(args.arch, smoke=not args.full_size, quant=args.quant)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch)
+    engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch,
+                    tuning_table=args.tuning_table)
     rng = np.random.default_rng(0)
     stop = (args.eos,) if args.eos >= 0 else ()
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,

@@ -18,7 +18,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import Mode, select_mode
+from repro.core.dispatch import select_plan
 from repro.core.kmm import kmm_n, mm_n
 
 Array = jax.Array
@@ -33,19 +33,49 @@ def _quantize(x: Array, w: int, axis) -> Tuple[Array, Array]:
     return q.astype(jnp.int32), scale
 
 
+def _dot_shape(qx: Array, qw: Array, dims) -> Tuple[int, int, int]:
+    """Flattened (M, K, N) of a dot_general (batch dims folded into M)."""
+    (lc, rc), (lb, rb) = dims
+    k = 1
+    for ax in lc:
+        k *= qx.shape[ax]
+    mm = 1
+    for ax in range(qx.ndim):
+        if ax not in lc:
+            mm *= qx.shape[ax]
+    n = 1
+    for ax in range(qw.ndim):
+        if ax not in rc and ax not in rb:
+            n *= qw.shape[ax]
+    return mm, k, n
+
+
 def _int_dot(qx: Array, qw: Array, w: int, m: int, dims,
              force_mode: str = "auto") -> Array:
-    """Integer GEMM on quantized values via the dispatched mode, fp32 out."""
-    plan = select_mode(w, m)
-    mode = plan.mode
+    """Integer GEMM on quantized values via the dispatched mode, fp32 out.
+
+    Mode selection goes through the table-backed
+    :func:`repro.core.dispatch.select_plan` (numerics-pinned: an installed
+    tuning table can never change the computed values here, only — on
+    backends where tiles matter — how they are computed), falling back to
+    the paper's analytic rule when no table is active.
+    """
+    eplan = select_plan(_dot_shape(qx, qw, dims), w, m=m, backend="xla")
     if force_mode == "mm2" and w > m:
-        mode = Mode.MM2
-    if mode is Mode.MM1:
+        return mm_n(qx, qw, w=w, n=max(eplan.digits, 2),
+                    dimension_numbers=dims, combine_dtype=jnp.float32)
+    if eplan.is_exact_int:
+        # Every exact-class plan (mm1/xla_ref/ffip, int32-combine digit
+        # variants) computes the same integer; on arbitrary dot_general dims
+        # that integer is the fused int32 dot — identical to the analytic
+        # w <= m path, so table/prior substitutions cannot move a bit.
         out = jax.lax.dot_general(qx, qw, dims,
                                   preferred_element_type=jnp.int32)
         return out.astype(jnp.float32)
-    fn = kmm_n if mode is Mode.KMM2 else mm_n
-    return fn(qx, qw, w=plan.w, n=max(plan.digits, 2), dimension_numbers=dims,
+    # fp32 class: pin_numerics guarantees variant/depth match the analytic
+    # rule, so this runs exactly the paper's KMM2/MM2 digit recursion.
+    fn = kmm_n if eplan.variant == "kmm2" else mm_n
+    return fn(qx, qw, w=w, n=max(eplan.digits, 2), dimension_numbers=dims,
               combine_dtype=jnp.float32)
 
 

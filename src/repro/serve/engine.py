@@ -30,6 +30,12 @@ Pass ``mesh=`` to serve sharded: params take the ``repro.dist.sharding``
 param rules, the slot cache takes the cache rules (slots over ``data``,
 kv-heads over ``model``), and prefill/decode jits run under the mesh so
 GSPMD partitions them (DESIGN.md §4.3).
+
+Pass ``tuning_table=`` (a path or loaded :class:`repro.tune.TuningTable`)
+to install a kernel-variant/tile tuning table before the engine builds its
+jits — every quantized GEMM the model traces then resolves through the
+table-backed ``select_plan`` (DESIGN.md §10).  Numerics are pinned: a table
+changes speed, never tokens.
 """
 from __future__ import annotations
 
@@ -52,6 +58,22 @@ from repro.models.config import ModelConfig
 Params = Any
 
 MIN_BUCKET = 8
+
+
+def prompt_buckets_for(max_seq: int,
+                       min_bucket: int = MIN_BUCKET) -> Tuple[int, ...]:
+    """Default prompt-bucket ladder: powers of two up to ``max_seq``.
+
+    Shared with ``python -m repro.tune --shapes serve`` so the tuner sweeps
+    exactly the prefill shapes the engine will execute.
+    """
+    buckets = []
+    b = min_bucket
+    while b < max_seq:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_seq)
+    return tuple(sorted(set(buckets)))
 
 
 @dataclass
@@ -122,10 +144,21 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params: Params, max_seq: int = 512,
                  batch_size: int = 4, rng_seed: int = 0,
                  mesh: Optional[Mesh] = None,
-                 prompt_buckets: Optional[Sequence[int]] = None):
+                 prompt_buckets: Optional[Sequence[int]] = None,
+                 tuning_table: Optional[Any] = None):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "continuous batching does not support encoder-decoder models")
+        if tuning_table is not None:
+            # Installs the PROCESS-GLOBAL registry before any jit below
+            # traces (jit caches keep the plans active at trace time).
+            # ``tuning_table=None`` leaves whatever table is currently
+            # active untouched — to serve untuned after a tuned engine in
+            # the same process, call repro.tune.set_active_table(None)
+            # first (tables are numerics-pinned, so this only ever changes
+            # speed, never tokens).
+            from repro.tune import set_active_table
+            set_active_table(tuning_table)
         self.cfg = cfg
         self.mesh = mesh
         if mesh is not None:
@@ -136,12 +169,7 @@ class Engine:
         self.batch = batch_size
         self._key = jax.random.PRNGKey(rng_seed)
         if prompt_buckets is None:
-            prompt_buckets = []
-            b = MIN_BUCKET
-            while b < max_seq:
-                prompt_buckets.append(b)
-                b *= 2
-            prompt_buckets.append(max_seq)
+            prompt_buckets = prompt_buckets_for(max_seq)
         self.prompt_buckets = tuple(sorted(set(prompt_buckets)))
 
         self._slots = [_Slot() for _ in range(batch_size)]

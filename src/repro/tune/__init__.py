@@ -1,0 +1,21 @@
+"""repro.tune — autotuning + kernel-variant registry for the integer GEMM
+engine (search space, offline runner, persisted tuning tables).
+
+See DESIGN.md §10.  Quickstart::
+
+    PYTHONPATH=src python -m repro.tune --shapes smoke --out tuned/smoke.json
+    # then install it process-wide:
+    from repro.tune import set_active_table
+    set_active_table("tuned/smoke.json")
+"""
+from repro.tune.space import (bucket_shape, candidates, cost_prior,
+                              prior_plan, pruned_space, validate)
+from repro.tune.table import (TuningTable, get_active_table, key_for,
+                              set_active_table, use_table)
+from repro.tune.runner import TuneResult, tune_shape
+
+__all__ = [
+    "TuneResult", "TuningTable", "bucket_shape", "candidates", "cost_prior",
+    "get_active_table", "key_for", "prior_plan", "pruned_space",
+    "set_active_table", "tune_shape", "use_table", "validate",
+]

@@ -1,0 +1,190 @@
+"""``python -m repro.tune`` — sweep GEMM shapes, persist winner tables.
+
+Shape sources:
+
+  * ``--shapes smoke``    two tiny shapes (CI tune-smoke job)
+  * ``--shapes configs``  the GEMM (K, N) pairs of every registered arch in
+                          ``repro.configs`` x the M values of the assignment
+                          shape cells (decode batches + prefill buckets),
+                          capped by ``--max-dim`` so the sweep is feasible on
+                          CPU interpret mode (table keys bucket anyway)
+  * ``--shapes serve``    the serve engine's prefill-bucket ladder x the
+                          model dims of ``--arch``
+  * ``--shapes MxKxN``    explicit problems, repeatable
+
+Example:
+
+    PYTHONPATH=src python -m repro.tune --shapes configs \
+        --w 8 12 --backend pallas --out tuned/default.json
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Set, Tuple
+
+from repro.tune import runner, space
+from repro.tune.table import DEFAULT_PATH, TuningTable
+
+Shape = Tuple[int, int, int]
+
+SMOKE_SHAPES: Tuple[Shape, ...] = ((64, 64, 64), (64, 128, 64))
+
+
+def _cap_bucket(d: int, cap: int) -> int:
+    return space.bucket_shape((min(d, cap),) * 3)[0]
+
+
+def _config_shapes(cap: int) -> List[Shape]:
+    """GEMM shapes the registered archs actually run (bucketed, capped)."""
+    from repro.configs import SHAPES as CELLS, get_config, list_archs
+    from repro.serve.engine import prompt_buckets_for
+
+    ms: Set[int] = {cell.global_batch for cell in CELLS.values()
+                    if cell.kind == "decode"}
+    ms |= set(prompt_buckets_for(512))           # serve prefill ladder
+    ms |= {cell.global_batch * min(cell.seq_len, 16)
+           for cell in CELLS.values() if cell.kind == "train"}
+    out: Set[Shape] = set()
+    for arch in list_archs():
+        cfg = get_config(arch)
+        kns = {(cfg.d_model, cfg.q_dim), (cfg.d_model, cfg.kv_dim),
+               (cfg.q_dim, cfg.d_model), (cfg.d_model, cfg.d_ff),
+               (cfg.d_ff, cfg.d_model), (cfg.d_model, cfg.padded_vocab)}
+        if cfg.n_experts:
+            fe = cfg.d_ff_expert or cfg.d_ff
+            kns |= {(cfg.d_model, fe), (fe, cfg.d_model)}
+        for m in ms:
+            for k, n in kns:
+                out.add((_cap_bucket(m, cap), _cap_bucket(k, cap),
+                         _cap_bucket(n, cap)))
+    return sorted(out)
+
+
+def _serve_shapes(arch: str, max_seq: int, cap: int, smoke: bool) -> List[Shape]:
+    from repro.configs import get_config
+    from repro.serve.engine import prompt_buckets_for
+
+    cfg = get_config(arch, smoke=smoke)
+    out: Set[Shape] = set()
+    for m in prompt_buckets_for(max_seq):
+        for k, n in ((cfg.d_model, cfg.q_dim), (cfg.d_model, cfg.d_ff),
+                     (cfg.d_ff, cfg.d_model)):
+            out.add((_cap_bucket(m, cap), _cap_bucket(k, cap),
+                     _cap_bucket(n, cap)))
+    return sorted(out)
+
+
+def _parse_shapes(args) -> List[Shape]:
+    shapes: List[Shape] = []
+    for tok in args.shapes:
+        if tok == "smoke":
+            shapes.extend(SMOKE_SHAPES)
+        elif tok == "configs":
+            shapes.extend(_config_shapes(args.max_dim))
+        elif tok == "serve":
+            shapes.extend(_serve_shapes(args.arch, args.max_seq,
+                                        args.max_dim, args.smoke_config))
+        else:
+            try:
+                m, k, n = (int(x) for x in tok.lower().split("x"))
+            except ValueError:
+                raise SystemExit(
+                    f"bad --shapes token {tok!r}: expected "
+                    f"smoke|configs|serve|MxKxN")
+            shapes.append((m, k, n))
+    return sorted(set(shapes))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune",
+        description="Autotune integer-GEMM kernel variants and tiles; "
+                    "persist winner tables under tuned/.")
+    ap.add_argument("--shapes", nargs="+", default=["configs"],
+                    help="smoke | configs | serve | explicit MxKxN ...")
+    ap.add_argument("--w", nargs="+", type=int, default=[8, 12],
+                    help="bitwidths to sweep (default: the policy widths)")
+    ap.add_argument("--m", type=int, default=8, help="multiplier bitwidth")
+    ap.add_argument("--backend", nargs="+", default=["pallas"],
+                    choices=["pallas", "xla"])
+    ap.add_argument("--out", default=DEFAULT_PATH,
+                    help=f"output table path (default {DEFAULT_PATH}); "
+                         f"merged into if it already exists")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiles", nargs="+", type=int, default=None,
+                    help="restrict tile choices (default "
+                         f"{space.TILE_CHOICES})")
+    ap.add_argument("--max-candidates", type=int, default=None,
+                    help="truncate the prior-ordered space per shape")
+    ap.add_argument("--max-dim", type=int, default=1024,
+                    help="cap derived config/serve dims (CPU feasibility)")
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    help="arch for --shapes serve")
+    ap.add_argument("--max-seq", type=int, default=512,
+                    help="serve bucket ladder upper bound")
+    ap.add_argument("--smoke-config", action="store_true",
+                    help="use the smoke-scale config for --shapes serve")
+    ap.add_argument("--strict-tpu", action="store_true",
+                    help="prune tiles that violate real-TPU tiling "
+                         "(lane 128 / s8 sublane 32)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    shapes = _parse_shapes(args)
+    if not shapes:
+        raise SystemExit("no shapes to sweep")
+
+    try:
+        table = TuningTable.load(args.out)
+        print(f"merging into existing table {args.out} "
+              f"({len(table)} entries)")
+    except FileNotFoundError:
+        table = TuningTable()
+    table.device = runner.device_label()
+
+    n_jobs = len(shapes) * len(args.w) * len(args.backend)
+    print(f"sweeping {len(shapes)} shapes x w={args.w} x "
+          f"backends={args.backend} ({n_jobs} problems) on {table.device}")
+    t0 = time.time()
+    done = 0
+    for backend in args.backend:
+        for w in args.w:
+            for shape in shapes:
+                done += 1
+                res = runner.tune_shape(
+                    shape, w, m=args.m, backend=backend, iters=args.iters,
+                    seed=args.seed, tile_choices=args.tiles,
+                    strict_tpu=args.strict_tpu,
+                    max_candidates=args.max_candidates,
+                    verbose=args.verbose)
+                n_ok = sum(1 for r in res.measurements if r.ok)
+                n_bad = sum(1 for r in res.measurements if not r.ok)
+                if res.winner is None:
+                    print(f"[{done}/{n_jobs}] {backend} w={w} "
+                          f"{shape}: NO correct candidate "
+                          f"({n_bad} rejected) — key skipped")
+                    continue
+                key = table.put(
+                    backend, shape, w, res.winner,
+                    us=round(res.winner_us, 2),
+                    us_default=(round(res.default_us, 2)
+                                if res.default_us == res.default_us else None),
+                    n_candidates=len(res.measurements))
+                print(f"[{done}/{n_jobs}] {key}: {res.winner.variant} "
+                      f"tiles={res.winner.tiles} "
+                      f"int32={int(res.winner.combine_int32)} "
+                      f"{res.winner_us:.1f}us "
+                      f"(x{res.speedup_vs_default:.2f} vs default, "
+                      f"{n_ok} ok / {n_bad} pruned-at-run)")
+    table.meta["sweep_s"] = f"{time.time() - t0:.1f}"
+    table.save(args.out)
+    print(f"wrote {args.out}: {len(table)} entries "
+          f"({time.time() - t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Offline benchmark loop: compile + time every pruned candidate, check
+correctness against :mod:`repro.kernels.ref`, record the winner.
+
+Each candidate is executed through the same :func:`repro.kernels.ops.run_plan`
+seam production uses (jit'd, plan as a static arg), so measured numbers are
+the numbers dispatch will actually get.  Correctness is a *gate*, not a
+tolerance: exact-int candidates must equal the int64 oracle bit-for-bit, and
+fp32-combine Pallas candidates must equal the pure-jnp ref-kernel mirror
+(identical padding + correction wrapper) bit-for-bit; only XLA fp32 digit
+recursions — whose reference *is* the core algorithm being run — use a
+normalized tolerance against the int64 oracle.
+
+On this CPU container the Pallas kernels run in interpret mode
+(``interpret=None`` auto-detects, same as the kernels themselves), so the
+tuner is CI-runnable; on a real TPU the same sweep measures the MXU.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dispatch import ExecPlan, analytic_plan
+from repro.kernels import ops
+from repro.kernels.ref import ref_int_gemm_i64
+from repro.tune import space as tune_space
+from repro.tune.space import Shape
+
+
+@dataclass
+class Measurement:
+    plan: ExecPlan
+    us: float = float("inf")
+    ok: bool = False
+    error: str = ""
+
+
+@dataclass
+class TuneResult:
+    shape: Shape
+    w: int
+    backend: str
+    winner: Optional[ExecPlan]
+    winner_us: float
+    default_us: float
+    measurements: List[Measurement] = field(default_factory=list)
+
+    @property
+    def speedup_vs_default(self) -> float:
+        if not self.winner or not np.isfinite(self.default_us) \
+                or self.winner_us <= 0:
+            return 1.0
+        return self.default_us / self.winner_us
+
+
+def make_operands(shape: Shape, w: int, seed: int = 0):
+    """Random signed w-bit operands for an (M, K) x (K, N) problem."""
+    m, k, n = shape
+    rng = np.random.default_rng(seed)
+    lim = 2 ** (w - 1)
+    a = rng.integers(-lim, lim, size=(m, k)).astype(np.int32)
+    b = rng.integers(-lim, lim, size=(k, n)).astype(np.int32)
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+def check_plan(plan: ExecPlan, a, b, *,
+               interpret: Optional[bool] = None) -> Tuple[bool, str]:
+    """Bit-exact correctness gate for one candidate (see module docstring)."""
+    try:
+        out = np.asarray(ops.run_plan_jit(a, b, plan, interpret=interpret))
+    except Exception as e:  # compile/shape failures count as candidate loss
+        return False, f"execution failed: {type(e).__name__}: {e}"
+    if plan.is_exact_int:
+        ref = ref_int_gemm_i64(np.asarray(a), np.asarray(b))
+        if not np.array_equal(out.astype(np.int64), ref):
+            return False, "exact-int candidate != int64 oracle"
+        return True, ""
+    if plan.backend == "pallas":
+        ref = np.asarray(ops.run_plan_jit(a, b, plan, interpret=interpret,
+                                          use_ref_kernels=True))
+        if not np.array_equal(out, ref):
+            return False, "fp32 pallas candidate != ref-kernel mirror"
+        return True, ""
+    # XLA fp32 digit recursion: normalized tolerance vs the int64 oracle
+    # (one fp32 rounding per output element by construction).
+    ref = ref_int_gemm_i64(np.asarray(a), np.asarray(b)).astype(np.float64)
+    denom = max(float(np.abs(ref).max()), 1.0)
+    if float(np.abs(out - ref).max()) / denom > 1e-6:
+        return False, "fp32 xla candidate exceeds normalized 1e-6 vs oracle"
+    return True, ""
+
+
+def bench_plan(plan: ExecPlan, a, b, *, iters: int = 3,
+               interpret: Optional[bool] = None) -> float:
+    """Steady-state microseconds per call (compile excluded)."""
+    fn = lambda: ops.run_plan_jit(a, b, plan, interpret=interpret)
+    fn().block_until_ready()                 # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(max(iters, 1)):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / max(iters, 1) * 1e6
+
+
+def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
+               iters: int = 3, seed: int = 0,
+               tile_choices: Optional[Sequence[int]] = None,
+               strict_tpu: bool = False,
+               interpret: Optional[bool] = None,
+               max_candidates: Optional[int] = None,
+               verbose: bool = False) -> TuneResult:
+    """Sweep the pruned space for one (shape, w, backend) problem.
+
+    Returns the fastest *correct* candidate plus the measured time of the
+    analytic default plan (so tables can report speedup honestly).
+    ``max_candidates`` truncates the prior-ordered space — when it bites,
+    the truncation is recorded in the result's measurement count, never
+    silent (the CLI logs it).
+    """
+    a, b = make_operands(shape, w, seed=seed)
+    cands = tune_space.pruned_space(shape, w, m=m, backend=backend,
+                                    tile_choices=tile_choices,
+                                    strict_tpu=strict_tpu)
+    if max_candidates is not None:
+        cands = cands[:max_candidates]
+    measurements: List[Measurement] = []
+    winner: Optional[ExecPlan] = None
+    winner_us = float("inf")
+    for plan in cands:
+        ok, err = check_plan(plan, a, b, interpret=interpret)
+        if not ok:
+            measurements.append(Measurement(plan, ok=False, error=err))
+            continue
+        us = bench_plan(plan, a, b, iters=iters, interpret=interpret)
+        measurements.append(Measurement(plan, us=us, ok=True))
+        if us < winner_us:
+            winner, winner_us = plan, us
+        if verbose:
+            print(f"    {plan.variant:7s} tiles={plan.tiles} "
+                  f"int32={int(plan.combine_int32)} depth={plan.depth}: "
+                  f"{us:9.1f} us")
+
+    # Time the analytic default (what production runs with no table) even
+    # when its stock tiles are oversized for this shape — that is exactly
+    # the waste the tuner exists to measure.
+    default = analytic_plan(w, m, backend=backend)
+    default_us = float("nan")
+    try:
+        default_us = bench_plan(default, a, b, iters=iters,
+                                interpret=interpret)
+    except Exception:
+        pass                       # e.g. pallas depth>1: NotImplementedError
+    return TuneResult(shape=shape, w=w, backend=backend, winner=winner,
+                      winner_us=winner_us, default_us=default_us,
+                      measurements=measurements)
+
+
+def device_label() -> str:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return f"tpu/{jax.devices()[0].device_kind}"
+    return f"{backend}/interpret"

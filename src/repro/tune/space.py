@@ -1,0 +1,289 @@
+"""Declarative autotuning search space for the integer-GEMM engine.
+
+A point in the space is an :class:`repro.core.dispatch.ExecPlan`: kernel
+variant (MM1 / KMM2 / MM2 / XLA-ref / FFIP), tile sizes (bm, bn, bk),
+combine precision (int32 post-adder vs fp32) and digit-recursion depth.
+``candidates`` enumerates the raw product space for one (M, K, N, w) problem;
+``validate`` prunes it with the *provable* bounds — the ``max_exact_k``
+int32-headroom bound from :mod:`repro.core.kmm`, the s8 digit-plane windows
+from the paper's Fig. 10 dispatch rule, per-digit accumulator headroom, VMEM
+footprint and tile sanity — and ``cost_prior`` ranks what survives with the
+op-count model of :mod:`repro.core.complexity` (Eqs. 2-8), so the tuner
+measures only plausible plans and table lookups fall back to a principled
+analytic order when no measurement exists.
+
+Pruning is a *correctness* filter, never a performance heuristic: every
+candidate that survives ``validate`` must produce bit-exact results against
+:mod:`repro.kernels.ref` (asserted by ``tests/test_tune.py`` across the whole
+pruned space).
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.complexity import (ADD, MULT, SHIFT, kmm_complexity,
+                                   mm_complexity)
+from repro.core.dispatch import (ExecPlan, VARIANTS, kmm_levels_needed,
+                                 select_mode)
+from repro.core.kmm import max_exact_k
+
+Shape = Tuple[int, int, int]   # (M, K, N)
+
+TILE_CHOICES: Tuple[int, ...] = (32, 64, 128, 256)
+# The FFIP literal materializes an (M, K/2, N) product tensor.
+FFIP_MAX_ELEMS = 1 << 20
+# Per-core VMEM budget for input tiles + int32 accumulators (bytes).
+VMEM_BUDGET = 12 * 1024 * 1024
+MAX_DEPTH = 3
+
+_N_ACCUM = {"mm1": 1, "kmm2": 3, "mm2": 4}
+
+
+def _tile_ok(block: int, dim: int) -> bool:
+    """A tile is sane if it is not more than one doubling past the dim
+    (ops.py zero-pads up to the block multiple; bigger wastes whole tiles)."""
+    return block <= 2 * max(dim, 1) or block == TILE_CHOICES[0]
+
+
+def digit_accum_k_bound(w: int) -> int:
+    """Largest (padded) K for which each digit-plane product accumulates
+    exactly in int32 (kmm_gemm.py: digit magnitudes ~ 2**(w/2), so headroom
+    covers K up to 2**(31 - w - 2))."""
+    head = 31 - w - 2
+    return 1 << head if head > 0 else 1
+
+
+def validate(plan: ExecPlan, shape: Shape, *,
+             strict_tpu: bool = False) -> Optional[str]:
+    """Return a rejection reason, or None if ``plan`` is valid for ``shape``.
+
+    Everything here is a hard correctness/feasibility bound; rejected plans
+    may crash, overflow int32, or silently produce wrong digits.
+    """
+    M, K, N = shape
+    w, m = plan.w, plan.m
+    if plan.variant not in VARIANTS:
+        return f"unknown variant {plan.variant!r}"
+    if m < 2:
+        return f"m={m} < 2"
+    if w < 1:
+        return f"w={w} < 1"
+    if plan.backend not in ("xla", "pallas"):
+        return f"unknown backend {plan.backend!r}"
+
+    if plan.variant == "xla_ref":
+        # one fused int32 dot: the full 2w-bit products accumulate directly,
+        # so the max_exact_k headroom bound is binding.
+        if max_exact_k(w) < K:
+            return f"xla_ref overflows int32: K={K} > max_exact_k={max_exact_k(w)}"
+        if not plan.combine_int32:
+            return "xla_ref is inherently exact; combine_int32 must be True"
+        return None
+
+    if plan.variant == "ffip":
+        if K % 2:
+            return "ffip needs even K"
+        if M * (K // 2) * N > FFIP_MAX_ELEMS:
+            return "ffip literal materializes (M, K/2, N); shape too large"
+        # (a_e + b_o)(a_o + b_e) terms are (w+1)-bit x (w+1)-bit products.
+        if max_exact_k(w + 1) < K:
+            return f"ffip overflows int32 at K={K} for w={w}"
+        if not plan.combine_int32:
+            return "ffip is inherently exact; combine_int32 must be True"
+        return None
+
+    if plan.variant == "mm1":
+        if w > m:
+            return f"mm1 needs w <= m ({w} > {m})"
+        if plan.backend == "xla":
+            return "mm1 on xla is the xla_ref variant"
+        if not plan.combine_int32:
+            return "mm1 is inherently exact; combine_int32 must be True"
+        # single int8xint8 -> int32 accumulation over K: same headroom
+        # bound as the fused dot.
+        if max_exact_k(w) < K:
+            return (f"mm1 overflows int32: K={K} > "
+                    f"max_exact_k={max_exact_k(w)}")
+    else:  # kmm2 / mm2 digit variants
+        if w < 2:
+            return "digit split needs w >= 2"
+        if plan.depth < 1 or plan.depth > MAX_DEPTH:
+            return f"depth {plan.depth} outside [1, {MAX_DEPTH}]"
+        if 2 ** plan.depth > w:
+            return f"depth {plan.depth} splits below 1-bit digits at w={w}"
+        if plan.backend == "pallas":
+            if plan.depth != 1:
+                return "pallas kernels implement single-level KMM2/MM2"
+            h = -(-w // 2)
+            if plan.variant == "kmm2" and w > 2 * m - 2:
+                # the paper's Fig. 10 window: As = A1 + A0 must fit m bits
+                return f"kmm2 pre-adder digits exceed s8 for w={w} > {2*m - 2}"
+            if plan.variant == "mm2" and w > 2 * m:
+                return f"mm2 digit planes exceed s8 for w={w} > {2*m}"
+            kp = -(-K // plan.block_k) * plan.block_k
+            if kp > digit_accum_k_bound(w):
+                return (f"digit accumulators overflow int32: padded K={kp} > "
+                        f"{digit_accum_k_bound(w)}")
+            del h
+        else:
+            # XLA digit recursion: every leaf digit must fit the multiplier.
+            r_min = kmm_levels_needed(w, m)
+            if r_min is None:
+                return f"w={w} too wide for m={m}"
+            if plan.depth < max(r_min, 1):
+                return f"depth {plan.depth} leaves digits wider than m={m}"
+        if plan.combine_int32 and max_exact_k(w) < K:
+            return (f"int32 combine fails headroom: K={K} > "
+                    f"max_exact_k({w})={max_exact_k(w)}")
+
+    # Tile sanity + VMEM footprint (pallas only; XLA ignores tiles).
+    if plan.backend == "pallas":
+        for b, d, name in ((plan.block_m, M, "block_m"),
+                           (plan.block_n, N, "block_n"),
+                           (plan.block_k, K, "block_k")):
+            if b < 8 or b & (b - 1):
+                return f"{name}={b} must be a power of two >= 8"
+            if not _tile_ok(b, d):
+                return f"{name}={b} oversized for dim {d}"
+        if strict_tpu:
+            if plan.block_n % 128:
+                return f"TPU lane dim: block_n={plan.block_n} % 128 != 0"
+            if plan.block_m % 32:
+                return f"TPU s8 sublane: block_m={plan.block_m} % 32 != 0"
+        n_acc = _N_ACCUM.get(plan.variant, 1)
+        planes = 1 if plan.variant == "mm1" else 2
+        vmem = (planes * (plan.block_m * plan.block_k
+                          + plan.block_k * plan.block_n)        # s8 inputs
+                + (n_acc + 1) * plan.block_m * plan.block_n * 4)  # i32 acc+out
+        if vmem > VMEM_BUDGET:
+            return f"VMEM footprint {vmem} > {VMEM_BUDGET}"
+    return None
+
+
+def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
+               tile_choices: Optional[Sequence[int]] = None,
+               strict_tpu: bool = False) -> Iterator[ExecPlan]:
+    """Enumerate the *valid* candidates for one GEMM problem.
+
+    ``backend`` selects the execution substrate of the digit variants; the
+    backend-independent reference variants (xla_ref, ffip) are always
+    offered so the tuner can discover when a plain fused dot wins (small K
+    within headroom).
+    """
+    tiles = tuple(tile_choices) if tile_choices else TILE_CHOICES
+    M, K, N = shape
+
+    def emit(plan: ExecPlan) -> Iterator[ExecPlan]:
+        if validate(plan, shape, strict_tpu=strict_tpu) is None:
+            yield plan
+
+    yield from emit(ExecPlan("xla_ref", w, m, backend=backend,
+                             combine_int32=True, depth=0, source="space"))
+    yield from emit(ExecPlan("ffip", w, m, backend=backend,
+                             combine_int32=True, depth=0, source="space"))
+
+    if backend == "xla":
+        r_min = kmm_levels_needed(w, m) or 1
+        for variant in ("kmm2", "mm2"):
+            for depth in range(max(r_min, 1), MAX_DEPTH + 1):
+                for ci in (False, True):
+                    yield from emit(ExecPlan(
+                        variant, w, m, backend="xla", combine_int32=ci,
+                        depth=depth, source="space"))
+        return
+
+    for bm in tiles:
+        for bn in tiles:
+            for bk in tiles:
+                yield from emit(ExecPlan(
+                    "mm1", w, m, backend="pallas", block_m=bm, block_n=bn,
+                    block_k=bk, combine_int32=True, depth=0, source="space"))
+                for variant in ("kmm2", "mm2"):
+                    for ci in (False, True):
+                        yield from emit(ExecPlan(
+                            variant, w, m, backend="pallas", block_m=bm,
+                            block_n=bn, block_k=bk, combine_int32=ci,
+                            depth=1, source="space"))
+
+
+def cost_prior(plan: ExecPlan, shape: Shape) -> float:
+    """Analytic cost of a plan, in weighted op units.
+
+    Built from the paper's complexity recursions (:mod:`repro.core.complexity`
+    Eqs. 2/5 evaluated at d=1 give per-product op counts: 3**r multiplies per
+    product for KMM, 4**r for MM, plus the per-output combine adds/shifts),
+    scaled to the padded rectangular problem, plus a per-tile overhead term
+    so the prior prefers fewer, larger grid steps when VMEM allows.
+    """
+    M, K, N = shape
+    bm, bn, bk = plan.tiles
+    if plan.backend == "pallas":
+        Mp, Np, Kp = (-(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk)
+        grid = (Mp // bm) * (Np // bn) * (Kp // bk)
+    else:
+        Mp, Np, Kp = M, N, K
+        grid = 1
+
+    if plan.variant == "xla_ref":
+        mults, combine = float(Mp * Np * Kp), 0.0
+    elif plan.variant == "ffip":
+        mults = float(M * N * (K // 2) + (M + N) * (K // 2))
+        combine = float(M * N)
+    else:
+        n = max(plan.digits, 1)
+        if plan.variant == "mm1" or n == 1:
+            mults, combine = float(Mp * Np * Kp), 0.0
+        else:
+            fn = kmm_complexity if plan.variant == "kmm2" else mm_complexity
+            ops = fn(n, plan.w, 1)            # d=1: per-product / per-output
+            mults = ops.total_of(MULT) * Mp * Np * Kp
+            combine = (ops.total_of(ADD) + ops.total_of(SHIFT)) * Mp * Np
+    # fp32 combine costs one extra cast/round per accumulator per output.
+    if not plan.combine_int32 and plan.variant in ("kmm2", "mm2"):
+        combine += _N_ACCUM[plan.variant] * Mp * Np
+    return mults + combine + 512.0 * grid
+
+
+def pruned_space(shape: Shape, w: int, *, m: int = 8,
+                 backend: str = "pallas",
+                 tile_choices: Optional[Sequence[int]] = None,
+                 strict_tpu: bool = False) -> List[ExecPlan]:
+    """The valid candidates for ``shape``/``w``, best-prior first."""
+    cands = list(candidates(shape, w, m=m, backend=backend,
+                            tile_choices=tile_choices, strict_tpu=strict_tpu))
+    return sorted(cands, key=lambda p: cost_prior(p, shape))
+
+
+def prior_plan(shape: Shape, w: int, *, m: int = 8, backend: str = "xla",
+               exact: bool = False) -> Optional[ExecPlan]:
+    """Best candidate by the cost prior alone (no measurement) — the table
+    fallback when a key has never been swept.  Restricted to candidates in
+    the analytic plan's numerics class so un-tuned keys stay bit-identical
+    to the paper's rule (see dispatch.select_plan)."""
+    import dataclasses
+
+    from repro.core.dispatch import analytic_plan, numerics_fingerprint
+    want = numerics_fingerprint(analytic_plan(w, m, backend=backend,
+                                              exact=exact))
+    best, best_cost = None, None
+    for cand in candidates(shape, w, m=m, backend=backend):
+        if numerics_fingerprint(cand) != want:
+            continue
+        c = cost_prior(cand, shape)
+        if best_cost is None or c < best_cost:
+            best, best_cost = cand, c
+    if best is not None:
+        best = dataclasses.replace(best, source="prior")
+    return best
+
+
+def _round_pow2(x: int, lo: int = 8) -> int:
+    v = lo
+    while v < x:
+        v *= 2
+    return v
+
+
+def bucket_shape(shape: Shape) -> Shape:
+    """Power-of-two M/N/K buckets used as table keys (min bucket 8)."""
+    return tuple(_round_pow2(int(d)) for d in shape)  # type: ignore

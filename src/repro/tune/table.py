@@ -1,0 +1,160 @@
+"""Persisted per-(backend, M/N/K bucket, bitwidth) tuning tables.
+
+A table maps a GEMM problem key to the measured-winner :class:`ExecPlan`
+found by :mod:`repro.tune.runner`.  Tables are plain JSON under ``tuned/``
+so they diff cleanly across PRs and load with zero dependencies:
+
+    {
+      "version": 1,
+      "device": "cpu/interpret",
+      "entries": {
+        "pallas/m64/k128/n64/w12": {
+          "variant": "kmm2", "block_m": 64, "block_n": 64, "block_k": 128,
+          "combine_int32": false, "depth": 1, "us": 412.7,
+          "us_default": 500.1, "n_candidates": 31
+        }
+      }
+    }
+
+Lookups bucket M/N/K to powers of two (``space.bucket_shape``), so one sweep
+over the shape grid of ``python -m repro.tune`` covers every nearby runtime
+shape.  The process-global *active table* is the registry the dispatch seam
+(:func:`repro.core.dispatch.select_plan`) consults; install one with
+``set_active_table(path_or_table)`` or scoped via ``use_table(...)``.
+Install tables *before* tracing/jitting model code: jit caches hold the plan
+that was active at trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.dispatch import ExecPlan
+from repro.tune.space import Shape, bucket_shape
+
+TABLE_VERSION = 1
+DEFAULT_DIR = "tuned"
+DEFAULT_PATH = os.path.join(DEFAULT_DIR, "default.json")
+
+_ENTRY_FIELDS = ("variant", "block_m", "block_n", "block_k",
+                 "combine_int32", "depth")
+
+
+def key_for(backend: str, shape: Shape, w: int, m: int = 8) -> str:
+    """Table key; includes the multiplier bitwidth ``m`` so sweeps at
+    different multiplier widths (different dispatch windows) never collide."""
+    mb, kb, nb = bucket_shape(shape)
+    return f"{backend}/m{mb}/k{kb}/n{nb}/w{w}/mult{m}"
+
+
+@dataclass
+class TuningTable:
+    """In-memory tuning table; ``entries`` maps key -> plain-dict record."""
+
+    entries: Dict[str, dict] = field(default_factory=dict)
+    device: str = ""
+    meta: Dict[str, str] = field(default_factory=dict)
+
+    # -- queries ------------------------------------------------------------
+
+    def lookup(self, backend: str, shape: Shape, w: int,
+               m: int = 8) -> Optional[ExecPlan]:
+        rec = self.entries.get(key_for(backend, shape, w, m))
+        if rec is None:
+            return None
+        try:
+            return ExecPlan(
+                variant=str(rec["variant"]), w=w, m=m, backend=backend,
+                block_m=int(rec["block_m"]), block_n=int(rec["block_n"]),
+                block_k=int(rec["block_k"]),
+                combine_int32=bool(rec["combine_int32"]),
+                depth=int(rec.get("depth", 1)), source="table")
+        except (KeyError, TypeError, ValueError):
+            return None            # malformed entry: treat as missing
+
+    def put(self, backend: str, shape: Shape, w: int, plan: ExecPlan,
+            **extra) -> str:
+        key = key_for(backend, shape, w, plan.m)
+        rec = {f: getattr(plan, f) for f in _ENTRY_FIELDS}
+        rec.update({k: v for k, v in extra.items() if v is not None})
+        self.entries[key] = rec
+        return key
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: Union[str, os.PathLike]) -> None:
+        d = os.path.dirname(str(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        doc = {"version": TABLE_VERSION, "device": self.device,
+               "meta": self.meta,
+               "entries": {k: self.entries[k] for k in sorted(self.entries)}}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: Union[str, os.PathLike]) -> "TuningTable":
+        with open(path) as f:
+            doc = json.load(f)
+        if int(doc.get("version", 0)) != TABLE_VERSION:
+            raise ValueError(
+                f"tuning table {path}: version {doc.get('version')!r} "
+                f"unsupported (want {TABLE_VERSION})")
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            raise ValueError(f"tuning table {path}: 'entries' must be a dict")
+        return cls(entries=dict(entries), device=str(doc.get("device", "")),
+                   meta=dict(doc.get("meta", {})))
+
+    def merge(self, other: "TuningTable") -> "TuningTable":
+        """Entries of ``other`` win on key conflicts."""
+        self.entries.update(other.entries)
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Process-global registry (the seam dispatch/ops/serve/train consult).
+# ---------------------------------------------------------------------------
+
+_LOCK = threading.Lock()
+_ACTIVE: Optional[TuningTable] = None
+
+
+def set_active_table(
+        table: Optional[Union[TuningTable, str, os.PathLike]]) -> None:
+    """Install (or clear, with None) the process-global tuning table.
+
+    Accepts a loaded :class:`TuningTable` or a path to a JSON table file.
+    Install *before* tracing model code — jit caches keep whatever plans
+    were active at trace time.
+    """
+    global _ACTIVE
+    if table is not None and not isinstance(table, TuningTable):
+        table = TuningTable.load(table)
+    with _LOCK:
+        _ACTIVE = table
+
+
+def get_active_table() -> Optional[TuningTable]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_table(table: Optional[Union[TuningTable, str, os.PathLike]]):
+    """Scoped ``set_active_table`` (restores the previous table on exit)."""
+    prev = get_active_table()
+    set_active_table(table)
+    try:
+        yield get_active_table()
+    finally:
+        set_active_table(prev)

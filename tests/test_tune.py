@@ -1,0 +1,374 @@
+"""repro.tune: search-space pruning, bit-exact candidate sweep, table
+persistence, and the dispatch-seam guarantees (headroom + pinned numerics).
+"""
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dispatch import (ExecPlan, Mode, analytic_plan,
+                                 numerics_fingerprint, select_mode,
+                                 select_plan)
+from repro.core.kmm import max_exact_k
+from repro.kernels import ops
+from repro.kernels.ref import ref_int_gemm_i64
+from repro.quant.qmatmul import quantized_matmul, quantized_matmul_batched
+from repro.tune import runner, space
+from repro.tune.table import TuningTable, get_active_table, key_for, use_table
+
+SHAPE = (16, 32, 16)          # small M/K/N: every candidate runs in ms
+TILES = (32, 64)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: dispatch-rule validation.
+# ---------------------------------------------------------------------------
+
+
+def test_select_mode_rejects_m_below_2():
+    for m in (0, 1, -3):
+        with pytest.raises(ValueError, match="must be >= 2"):
+            select_mode(8, m=m)
+
+
+def test_w_2m_minus_1_boundary_is_mm2():
+    """w = 2m - 1 lands in MM2 by design: the Karatsuba pre-adder digits
+    need m + 1 bits there (documented in the select_mode docstring)."""
+    for m in (4, 8):
+        plan = select_mode(2 * m - 1, m=m)
+        assert plan.mode is Mode.MM2 and plan.passes == 4
+        assert select_mode(2 * m - 2, m=m).mode is Mode.KMM2
+
+
+# ---------------------------------------------------------------------------
+# Satellite: every pruned-space candidate is bit-exact vs kernels/ref.py.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [4, 8, 12, 14])
+def test_pruned_space_bit_exact_vs_ref(w):
+    """Interpret-mode tile sweep: every candidate the pruner admits must
+    reproduce kernels/ref.py bit-for-bit — exact-int candidates against the
+    int64 oracle, fp32-combine candidates against the pure-jnp ref-kernel
+    mirror (identical padding + zero-point correction)."""
+    cands = space.pruned_space(SHAPE, w, backend="pallas",
+                               tile_choices=TILES)
+    assert cands, f"empty pruned space at w={w}"
+    a, b = runner.make_operands(SHAPE, w, seed=w)
+    a_np, b_np = np.asarray(a), np.asarray(b)
+    oracle = ref_int_gemm_i64(a_np, b_np)
+    seen_variants = set()
+    for plan in cands:
+        assert space.validate(plan, SHAPE) is None
+        out = np.asarray(ops.run_plan_jit(a, b, plan))
+        if plan.is_exact_int:
+            np.testing.assert_array_equal(
+                out.astype(np.int64), oracle,
+                err_msg=f"exact candidate diverged: {plan}")
+        else:
+            mirror = np.asarray(ops.run_plan_jit(a, b, plan,
+                                                 use_ref_kernels=True))
+            np.testing.assert_array_equal(
+                out, mirror, err_msg=f"fp32 candidate diverged: {plan}")
+        seen_variants.add(plan.variant)
+    assert "kmm2" in seen_variants or w <= 2   # KMM2 covers w in [2, 14]
+    if w == 14:
+        # headroom pruning must have dropped every int32-combine candidate:
+        # max_exact_k(14) = 8 < K = 32
+        assert all(not p.combine_int32 for p in cands)
+        assert all(p.variant not in ("xla_ref", "ffip") for p in cands)
+
+
+def test_xla_digit_space_exact_candidates_bit_exact():
+    w = 12
+    cands = [p for p in space.candidates(SHAPE, w, backend="xla")
+             if p.combine_int32]
+    assert any(p.depth > 1 for p in cands)     # plan-depth is a real knob
+    a, b = runner.make_operands(SHAPE, w, seed=3)
+    oracle = ref_int_gemm_i64(np.asarray(a), np.asarray(b))
+    for plan in cands:
+        out = np.asarray(ops.run_plan_jit(a, b, plan))
+        np.testing.assert_array_equal(out.astype(np.int64), oracle,
+                                      err_msg=str(plan))
+
+
+# ---------------------------------------------------------------------------
+# Space pruning + cost prior.
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_headroom_violations():
+    bad = ExecPlan("kmm2", 14, backend="pallas", block_m=32, block_n=32,
+                   block_k=32, combine_int32=True)
+    reason = space.validate(bad, (64, 128, 64))
+    assert reason is not None and "headroom" in reason
+    # mm1's single int8 accumulation has the same bound: at w=8, K=2^18 the
+    # worst case K*(2^7)^2 = 2^32 overflows int32 — and select_plan must
+    # refuse such a table entry
+    big_k = (128, 1 << 18, 128)
+    mm1_bad = ExecPlan("mm1", 8, backend="pallas", combine_int32=True)
+    assert space.validate(mm1_bad, big_k) is not None
+    t = TuningTable()
+    t.put("pallas", big_k, 8, mm1_bad)
+    with use_table(t):
+        # prior also can't offer anything at this K (all exact-class
+        # candidates fail headroom), so the analytic rule survives
+        assert select_plan(big_k, 8, backend="pallas").source == "analytic"
+    assert space.validate(
+        ExecPlan("xla_ref", 14, combine_int32=True), (64, 128, 64)
+    ) is not None
+    # mm1 outside its window
+    assert space.validate(
+        ExecPlan("mm1", 12, backend="pallas", combine_int32=True),
+        SHAPE) is not None
+    # kmm2 past the paper's 2m-2 window on pallas
+    assert space.validate(
+        ExecPlan("kmm2", 16, backend="pallas", block_m=32, block_n=32,
+                 block_k=32), SHAPE) is not None
+
+
+def test_cost_prior_prefers_kmm2_over_mm2():
+    k2 = ExecPlan("kmm2", 12, backend="pallas", block_m=32, block_n=32,
+                  block_k=32)
+    m2 = ExecPlan("mm2", 12, backend="pallas", block_m=32, block_n=32,
+                  block_k=32)
+    assert space.cost_prior(k2, SHAPE) < space.cost_prior(m2, SHAPE)
+
+
+def test_prior_plan_stays_in_analytic_numerics_class():
+    for backend in ("xla", "pallas"):
+        for w in (8, 12):
+            prior = space.prior_plan(SHAPE, w, backend=backend)
+            assert prior is not None and prior.source == "prior"
+            base = analytic_plan(w, backend=backend)
+            assert numerics_fingerprint(prior) == numerics_fingerprint(base)
+
+
+# ---------------------------------------------------------------------------
+# Table persistence + registry.
+# ---------------------------------------------------------------------------
+
+
+def test_table_roundtrip_and_bucketing(tmp_path):
+    t = TuningTable(device="test")
+    plan = ExecPlan("kmm2", 12, backend="pallas", block_m=32, block_n=64,
+                    block_k=32, combine_int32=False)
+    key = t.put("pallas", (60, 100, 60), 12, plan, us=12.5)
+    assert key == key_for("pallas", (64, 128, 64), 12)   # pow2 buckets
+    path = tmp_path / "t.json"
+    t.save(path)
+    t2 = TuningTable.load(path)
+    # any shape in the same bucket hits the entry
+    got = t2.lookup("pallas", (57, 127, 33), 12)
+    assert got is not None and got.tiles == (32, 64, 32)
+    assert got.source == "table" and got.w == 12
+    assert t2.lookup("pallas", (60, 100, 60), 8) is None
+    assert t2.lookup("xla", (60, 100, 60), 12) is None
+    # malformed entries read as missing, never crash
+    doc = json.loads(path.read_text())
+    doc["entries"][key_for("pallas", (8, 8, 8), 8)] = {"variant": 3}
+    path.write_text(json.dumps(doc))
+    assert TuningTable.load(path).lookup("pallas", (8, 8, 8), 8) is None
+
+
+def test_use_table_scoped_install(tmp_path):
+    t = TuningTable()
+    before = get_active_table()
+    with use_table(t) as active:
+        assert active is t and get_active_table() is t
+        with use_table(None):
+            assert get_active_table() is None
+        assert get_active_table() is t
+    assert get_active_table() is before
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: select_plan never violates headroom; tables never change
+# numerics.
+# ---------------------------------------------------------------------------
+
+
+def _hostile_table():
+    """Entries that are individually invalid or numerics-changing."""
+    t = TuningTable()
+    # int32 combine far past max_exact_k(14) = 8
+    t.put("pallas", (64, 128, 64), 14,
+          ExecPlan("kmm2", 14, backend="pallas", block_m=32, block_n=32,
+                   block_k=32, combine_int32=True))
+    # xla_ref where the fused dot overflows int32
+    t.put("xla", (64, 4096, 64), 14,
+          ExecPlan("xla_ref", 14, combine_int32=True))
+    # numerics-changing: mm2 instead of kmm2 on the fp32 path
+    t.put("xla", SHAPE, 12, ExecPlan("mm2", 12, backend="xla", depth=1))
+    # valid exact-class variant switch
+    t.put("pallas", (64, 128, 64), 10,
+          ExecPlan("mm2", 10, backend="pallas", block_m=64, block_n=64,
+                   block_k=64, combine_int32=True))
+    return t
+
+
+def test_select_plan_never_returns_headroom_violator():
+    with use_table(_hostile_table()):
+        for shape, w, backend, exact in [
+                ((64, 128, 64), 14, "pallas", False),
+                ((64, 4096, 64), 14, "xla", False),
+                ((64, 128, 64), 10, "pallas", True),
+                (SHAPE, 12, "xla", False)]:
+            plan = select_plan(shape, w, backend=backend, exact=exact)
+            if plan.variant in ("kmm2", "mm2", "mm1"):
+                assert space.validate(plan, shape) is None, (shape, w, plan)
+            if plan.combine_int32:
+                assert max_exact_k(w) >= shape[1]
+        # an exact request that cannot satisfy the headroom bound is refused
+        # at the API boundary, before any plan (table or analytic) runs
+        a = jnp.zeros((64, 128), jnp.int32)
+        b = jnp.zeros((128, 64), jnp.int32)
+        with pytest.raises(ValueError, match="max exact K"):
+            ops.int_gemm(a, b, w=14, backend="pallas", exact=True)
+
+
+def test_quantized_matmul_bit_identical_with_table():
+    """A tuning table may change tiles/variant, never numerics: quantized
+    matmul outputs are bit-identical with and without the table installed."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 16, 32)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    xb = jnp.asarray(rng.standard_normal((2, 8, 32)), jnp.float32)
+    wb = jnp.asarray(rng.standard_normal((2, 32, 8)), jnp.float32)
+    for w_bits in (8, 12, 16):
+        base = np.asarray(quantized_matmul(x, wm, w_bits))
+        base_b = np.asarray(quantized_matmul_batched(xb, wb, w_bits))
+        with use_table(_hostile_table()):
+            tuned = np.asarray(quantized_matmul(x, wm, w_bits))
+            tuned_b = np.asarray(quantized_matmul_batched(xb, wb, w_bits))
+        np.testing.assert_array_equal(base, tuned)
+        np.testing.assert_array_equal(base_b, tuned_b)
+
+
+def test_qmatmul_bit_identical_large_k_prior_path():
+    """fp32 addition is exact below 2**24, so small-K identity tests cannot
+    see numerics drift.  At w=8, K=2048 the accumulators pass 2**24; the
+    exact-class guarantee in _int_dot (every exact-class plan — here the
+    prior picks ffip — executes as the fused int32 dot) must keep the
+    output bit-identical in this regime too, by construction rather than
+    by rounding coincidence."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 2048)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((2048, 64)), jnp.float32)
+    base = np.asarray(quantized_matmul(x, wm, 8))
+    with use_table(TuningTable()):       # active but empty -> prior path
+        prior = np.asarray(quantized_matmul(x, wm, 8))
+    with use_table(_hostile_table()):
+        hostile = np.asarray(quantized_matmul(x, wm, 8))
+    np.testing.assert_array_equal(base, prior)
+    np.testing.assert_array_equal(base, hostile)
+
+
+def test_int_gemm_pallas_fp32_table_tiles_preserve_k_padding():
+    """fp32-Pallas accumulators depend on the padded K (zero-padded rows
+    contribute centered digits and the z*z*kp correction; the cancellation
+    is exact in real arithmetic but not guaranteed in fp32 past 2**24), so
+    a same-fingerprint table entry is honored only when its block_k implies
+    the analytic default's padded K; otherwise the table is ignored."""
+    w, shape = 12, (8, 5000, 8)          # accumulators ~2e7 > 2**24
+    rng = np.random.default_rng(13)
+    a = jnp.asarray(rng.integers(-2048, 2048, (shape[0], shape[1])),
+                    jnp.int32)
+    b = jnp.asarray(rng.integers(-2048, 2048, (shape[1], shape[2])),
+                    jnp.int32)
+    base = np.asarray(ops.int_gemm(a, b, w=w, backend="pallas"))
+
+    def table_with(bk):
+        t = TuningTable()
+        t.put("pallas", shape, w,
+              ExecPlan("kmm2", w, backend="pallas", block_m=32, block_n=32,
+                       block_k=bk, combine_int32=False))
+        return t
+
+    # block_k=128: padded K 5120 == the default 256-tile padding -> adopted
+    with use_table(table_with(128)):
+        plan = select_plan(shape, w, backend="pallas")
+        assert plan.block_k == 128 and plan.source == "table"
+        same_pad = np.asarray(ops.int_gemm(a, b, w=w, backend="pallas"))
+    # block_k=64: padded K 5056 != 5120 -> table ignored, analytic plan
+    with use_table(table_with(64)):
+        plan = select_plan(shape, w, backend="pallas")
+        assert plan.block_k == 256 and plan.source == "analytic"
+        diff_pad = np.asarray(ops.int_gemm(a, b, w=w, backend="pallas"))
+    np.testing.assert_array_equal(base, same_pad)
+    np.testing.assert_array_equal(base, diff_pad)
+
+
+def test_int_gemm_exact_bit_identical_under_variant_switch():
+    """Exact-int plans are interchangeable: a table switching KMM2 -> MM2
+    (+ tiles) on the exact pallas path must not move a single bit."""
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.integers(-512, 512, (64, 128)), jnp.int32)
+    b = jnp.asarray(rng.integers(-512, 512, (128, 64)), jnp.int32)
+    base = np.asarray(ops.int_gemm(a, b, w=10, backend="pallas", exact=True))
+    with use_table(_hostile_table()):
+        plan = select_plan((64, 128, 64), 10, backend="pallas", exact=True)
+        assert plan.source == "table" and plan.variant == "mm2"
+        tuned = np.asarray(ops.int_gemm(a, b, w=10, backend="pallas",
+                                        exact=True))
+    np.testing.assert_array_equal(base, tuned)
+    np.testing.assert_array_equal(base.astype(np.int64),
+                                  ref_int_gemm_i64(np.asarray(a),
+                                                   np.asarray(b)))
+
+
+# ---------------------------------------------------------------------------
+# Runner + end-to-end registry flow.
+# ---------------------------------------------------------------------------
+
+
+def test_tune_shape_and_registry_flow(tmp_path):
+    res = runner.tune_shape(SHAPE, 8, backend="pallas", iters=1,
+                            tile_choices=(32,))
+    assert res.winner is not None
+    assert space.validate(res.winner, SHAPE) is None
+    assert all(m.ok for m in res.measurements if m.us < float("inf"))
+    t = TuningTable(device="test")
+    t.put("pallas", SHAPE, 8, res.winner, us=res.winner_us)
+    path = tmp_path / "tuned.json"
+    t.save(path)
+    with use_table(str(path)):        # set_active_table accepts a path
+        plan = select_plan(SHAPE, 8, backend="pallas")
+        assert plan.source in ("table", "table+tiles")
+        assert plan.tiles == res.winner.tiles
+
+
+def test_bench_json_emission(tmp_path):
+    """benchmarks/run.py persists machine-readable BENCH_<group>.json."""
+    from benchmarks.run import write_bench_json
+
+    rows = [{"bench": "serve", "name": "serve/x/slots4", "us_per_call": 9.1,
+             "tokens_per_s": 123.4, "ttft_mean_ms": 5.6}]
+    checks = [("claim", True, "detail")]
+    path = write_bench_json("serve", rows, checks, str(tmp_path))
+    doc = json.loads(open(path).read())
+    assert path.endswith("BENCH_serve.json")
+    assert doc["rows"][0]["tokens_per_s"] == 123.4
+    assert doc["checks"] == [{"claim": "claim", "ok": True,
+                              "detail": "detail"}]
+
+
+def test_runner_rejects_wrong_candidates(monkeypatch):
+    """The correctness gate actually gates: a broken plan never wins."""
+    a, b = runner.make_operands(SHAPE, 8, seed=0)
+    good = ExecPlan("mm1", 8, backend="pallas", block_m=32, block_n=32,
+                    block_k=32, combine_int32=True)
+    ok, _ = runner.check_plan(good, a, b)
+    assert ok
+    bad = ExecPlan("mm1", 8, backend="pallas", block_m=32, block_n=32,
+                   block_k=32, combine_int32=True)
+    orig = ops.run_plan_jit
+
+    def corrupt(x, y, plan, **kw):
+        out = orig(x, y, plan, **kw)
+        return out + 1 if plan is bad else out
+
+    monkeypatch.setattr(runner.ops, "run_plan_jit", corrupt)
+    ok, err = runner.check_plan(bad, a, b)
+    assert not ok and "oracle" in err
