@@ -1,0 +1,101 @@
+"""Bench-regression gate: fresh BENCH_<group>.json vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_walltime.json --new /tmp/bench/BENCH_walltime.json \
+        --tol 0.25 --match int_gemm fused staged \
+        --normalize int_gemm_w8_mm1_1024
+
+Compares ``us_per_call`` means of the GEMM rows (names matching any
+``--match`` substring) and exits 1 if any row regressed by more than
+``--tol`` (fraction; 0.25 = 25%).  Absolute CPU wall-times differ between
+machines, so ``--normalize NAME`` divides every row by that row's value *in
+the same file* before comparing — the gate then tracks relative GEMM-engine
+regressions (e.g. the fused kernel slipping vs the MM1 baseline) instead of
+host speed.  Ratio rows (``*_ratio*``) are always compared un-normalized:
+they are already dimensionless.  The default ``--match`` set gates on the
+int_gemm rows plus the fused-over-staged *ratio* rows (interleaved-paired
+in bench_walltime, so correlated noise bursts cancel), not the raw
+fused_/staged_ microsecond rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get("rows", []):
+        name, us = row.get("name"), row.get("us_per_call")
+        if name and isinstance(us, (int, float)) and us > 0:
+            out[str(name)] = float(us)
+    return out
+
+
+def compare(base: Dict[str, float], new: Dict[str, float], tol: float,
+            match, normalize: str = "") -> int:
+    def norm(rows: Dict[str, float], name: str) -> float:
+        if "ratio" in name or not normalize:
+            return rows[name]
+        ref = rows.get(normalize)
+        if not ref:
+            raise SystemExit(f"--normalize row {normalize!r} missing/zero")
+        return rows[name] / ref
+    shared = sorted(set(base) & set(new))
+    if match:
+        shared = [n for n in shared if any(tok in n for tok in match)]
+    if not shared:
+        raise SystemExit("no shared GEMM rows to compare "
+                         f"(match={list(match)})")
+    n_fail = 0
+    for name in shared:
+        b, v = norm(base, name), norm(new, name)
+        reg = v / b - 1.0
+        status = "ok"
+        if reg > tol:
+            status = f"REGRESSED > {tol:.0%}"
+            n_fail += 1
+        print(f"{name:44s} base {b:12.4g}  new {v:12.4g}  "
+              f"{reg:+7.1%}  {status}")
+    missing = sorted(n for n in base if n not in new
+                     and (not match or any(tok in n for tok in match)))
+    for name in missing:
+        print(f"{name:44s} DROPPED from new run")
+        n_fail += 1
+    return n_fail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail on >tol wall-time regressions of the GEMM groups "
+                    "vs the committed BENCH json baseline.")
+    ap.add_argument("--baseline", default="BENCH_walltime.json")
+    ap.add_argument("--new", required=True)
+    ap.add_argument("--tol", type=float, default=0.25)
+    ap.add_argument("--match", nargs="*",
+                    default=("int_gemm", "fused_over_staged"),
+                    help="row-name substrings that define the GEMM groups. "
+                         "Default gates on the XLA int_gemm rows and the "
+                         "paired fused/staged ratio rows — the raw "
+                         "fused_/staged_ us rows ride machine-noise bursts "
+                         "that the interleaved ratio cancels, so the ratio "
+                         "is the stable form of the same claim")
+    ap.add_argument("--normalize", default="",
+                    help="row name to divide all non-ratio rows by "
+                         "(cancels host speed for cross-machine runs)")
+    args = ap.parse_args(argv)
+    n_fail = compare(load_rows(args.baseline), load_rows(args.new),
+                     args.tol, tuple(args.match), args.normalize)
+    if n_fail:
+        print(f"\n{n_fail} GEMM row(s) regressed beyond {args.tol:.0%}")
+        return 1
+    print("\nno GEMM regressions beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

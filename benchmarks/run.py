@@ -67,6 +67,10 @@ def main() -> None:
                     help="skip writing BENCH_<group>.json files")
     ap.add_argument("--tuning-table", default=None,
                     help="repro.tune table JSON to install before running")
+    ap.add_argument("--only", default=None,
+                    choices=["paper_tables", "walltime", "serve", "roofline"],
+                    help="run a single benchmark group (e.g. the CI "
+                         "bench-regression step runs --only walltime)")
     args = ap.parse_args()
 
     if args.tuning_table:
@@ -86,24 +90,30 @@ def main() -> None:
             json_paths.append(write_bench_json(group, rows, checks,
                                                args.json_dir))
 
-    t0 = time.time()
-    pt_rows, pt_checks = [], []
-    for fn in (paper_tables.fig5, paper_tables.fig11, paper_tables.fig12,
-               paper_tables.table1, paper_tables.table2, paper_tables.table3):
-        rows, checks = fn()
-        pt_rows.extend(rows)
-        pt_checks.extend(checks)
-    record("paper_tables", pt_rows, pt_checks)
+    def wants(group: str) -> bool:
+        return args.only is None or args.only == group
 
-    if not args.skip_walltime:
+    t0 = time.time()
+    if wants("paper_tables"):
+        pt_rows, pt_checks = [], []
+        for fn in (paper_tables.fig5, paper_tables.fig11, paper_tables.fig12,
+                   paper_tables.table1, paper_tables.table2,
+                   paper_tables.table3):
+            rows, checks = fn()
+            pt_rows.extend(rows)
+            pt_checks.extend(checks)
+        record("paper_tables", pt_rows, pt_checks)
+
+    if wants("walltime") and not args.skip_walltime:
         rows = bench_walltime.run()
         record("walltime", rows, bench_walltime.checks(rows))
 
-    if not args.skip_serve:
+    if wants("serve") and not args.skip_serve:
         rows = bench_serve.run()
         record("serve", rows, bench_serve.checks(rows))
 
-    record("roofline", bench_roofline.run(args.dryrun_dir), [])
+    if wants("roofline"):
+        record("roofline", bench_roofline.run(args.dryrun_dir), [])
 
     print("\n".join(csv_lines))
     print()

@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--quant-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="'pallas' routes every quantized matmul through "
+                         "the fused single-pass kernel (DESIGN.md §11)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full_size, quant=args.quant)
@@ -37,7 +41,8 @@ def main():
           f"params={count_params(cfg)/1e6:.1f}M")
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, max_seq=96, batch_size=args.batch)
+    engine = Engine(cfg, params, max_seq=96, batch_size=args.batch,
+                    quant_backend=args.quant_backend)
     rng = np.random.default_rng(0)
     # ragged prompts + mixed budgets: the continuous-batching scheduler
     # admits each request into the first freed slot (no group barrier)

@@ -120,12 +120,19 @@ def schedule(widths: List[int], m: int = 8) -> List[Plan]:
 
 # Kernel variants the tuner can pick between.  "mm1"/"kmm2"/"mm2" are the
 # paper's modes (executed on the Pallas kernels or the XLA digit recursion
-# depending on ``backend``); "xla_ref" is a single fused int32 dot_general
+# depending on ``backend``); "fused" is the single-pass Pallas kernel
+# (in-kernel digit split + zero-point correction + optional dequant
+# epilogue, covering the MM1 and single-level KMM2 windows — see
+# kernels/fused_gemm.py); "xla_ref" is a single fused int32 dot_general
 # (valid only within the int32 headroom bound); "ffip" is the literal
 # free-pipeline inner-product reference (tiny shapes only).
-VARIANTS = ("mm1", "kmm2", "mm2", "xla_ref", "ffip")
+VARIANTS = ("mm1", "kmm2", "mm2", "fused", "xla_ref", "ffip")
 
 _EXACT_VARIANTS = ("mm1", "xla_ref", "ffip")  # integer core, no fp32 combine
+
+# Variants whose recorded tiles reflect a real Pallas measurement (the
+# tiles-only adoption path in select_plan).
+_TILED_VARIANTS = ("mm1", "kmm2", "mm2", "fused")
 
 
 @dataclass(frozen=True)
@@ -148,13 +155,22 @@ class ExecPlan:
     combine_int32: bool = False  # int32 post-adder (exact) vs fp32
     depth: int = 1               # digit-recursion levels (digits = 2**depth)
     source: str = "analytic"     # "analytic" | "table" | "prior" (+notes)
+    # Fused-kernel epilogue: "none" (raw int32/fp32 accumulator out) or
+    # "dequant" (per-token x per-channel scales applied in-kernel).  A
+    # call-site property, never persisted in tuning tables — quant/qmatmul
+    # stamps it onto the selected plan before running.
+    epilogue: str = "none"
 
     @property
     def digits(self) -> int:
+        if self.variant == "fused":
+            return 2 if self.w > self.m else 1
         return 2 ** self.depth if self.variant in ("kmm2", "mm2") else 1
 
     @property
     def mode(self) -> Optional[Mode]:
+        if self.variant == "fused":
+            return Mode.KMM2 if self.w > self.m else Mode.MM1
         if self.variant == "kmm2":
             return Mode.KMM2
         if self.variant == "mm2":
@@ -171,6 +187,8 @@ class ExecPlan:
     def is_exact_int(self) -> bool:
         """True when the plan computes the mathematically exact integer
         product in int32 (validity-checked against ``max_exact_k``)."""
+        if self.variant == "fused" and self.w <= self.m:
+            return True              # MM1-window core: one int8 MXU pass
         return self.combine_int32 or self.variant in _EXACT_VARIANTS
 
 
@@ -180,10 +198,15 @@ def numerics_fingerprint(plan: ExecPlan):
     the same integer; fp32-combine plans are keyed by everything that changes
     rounding: variant, recursion depth and backend (the Pallas path runs on
     centered digit planes + zero-point correction, the XLA path on raw
-    digits — same value, different fp32 rounding)."""
+    digits — same value, different fp32 rounding).  The fused kernel applies
+    the *identical* fp32 operation sequence as the staged Pallas KMM2 path
+    (asserted by tests/test_fused_gemm.py), so it shares that class; the
+    epilogue is part of the fingerprint because a dequantized output is a
+    different value than the raw accumulator."""
     if plan.is_exact_int:
-        return ("exact",)
-    return ("fp32", plan.variant, plan.depth, plan.backend)
+        return ("exact", plan.epilogue)
+    variant = "kmm2" if plan.variant == "fused" else plan.variant
+    return ("fp32", variant, plan.depth, plan.backend, plan.epilogue)
 
 
 DEFAULT_TILES = (128, 128, 256)
@@ -191,13 +214,26 @@ DEFAULT_TILES = (128, 128, 256)
 
 def analytic_plan(w: int, m: int = 8, *, backend: str = "xla",
                   exact: bool = False) -> ExecPlan:
-    """The paper's dispatch rule as an ExecPlan with default tiles."""
+    """The paper's dispatch rule as an ExecPlan with default tiles.
+
+    On ``backend="pallas"`` the MM1 and single-level KMM2 windows route to
+    the fused single-pass kernel (kernels/fused_gemm.py) — numerics-identical
+    to the staged kernels (same fingerprint class), one HBM round-trip
+    instead of ~6.  MM2 and deeper recursion keep the staged variants.
+    """
     plan = select_mode(w, m)
     bm, bn, bk = DEFAULT_TILES
-    return ExecPlan(variant=plan.mode.value, w=w, m=m, backend=backend,
+    variant = plan.mode.value
+    depth = max(plan.recursion, 1) if plan.mode is not Mode.MM1 else 0
+    combine_int32 = exact
+    if backend == "pallas" and (
+            plan.mode is Mode.MM1
+            or (plan.mode is Mode.KMM2 and plan.recursion == 1)):
+        variant = "fused"
+        combine_int32 = exact or plan.mode is Mode.MM1
+    return ExecPlan(variant=variant, w=w, m=m, backend=backend,
                     block_m=bm, block_n=bn, block_k=bk,
-                    combine_int32=exact, depth=max(plan.recursion, 1)
-                    if plan.mode is not Mode.MM1 else 0)
+                    combine_int32=combine_int32, depth=depth)
 
 
 def _padded(dim: int, block: int) -> int:
@@ -256,7 +292,7 @@ def select_plan(shape: Tuple[int, int, int], w: int, *, m: int = 8,
     # tiles only, and only when the entry actually measured tiles — an
     # xla_ref / ffip / xla-backend winner's recorded tiles are meaningless
     # defaults, so keep the analytic plan wholesale.
-    if entry.variant not in ("mm1", "kmm2", "mm2") \
+    if entry.variant not in _TILED_VARIANTS \
             or entry.backend != "pallas":
         return base
     if not _k_padding_matches(shape, base,

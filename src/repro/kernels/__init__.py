@@ -1,7 +1,11 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; see DESIGN.md §2).
 
-kmm_gemm  — KMM2 integer GEMM: 3 digit-plane MXU passes + Algorithm-5
-            two-level accumulation (the paper's Fig. 8 architecture).
+fused_gemm — single-pass KMM2/MM1 GEMM: in-kernel digit split, zero-point
+            correction and dequant epilogue in one pallas_call (the
+            production pallas route, DESIGN.md §11; grouped MoE variant).
+kmm_gemm  — KMM2 integer GEMM on pre-split planes: 3 digit-plane MXU
+            passes + Algorithm-5 two-level accumulation (the paper's
+            Fig. 8 architecture); staged fallback + fused-kernel oracle.
 mm2_gemm  — conventional 4-pass baseline (Fig. 3).
 mm1_gemm  — single-pass int8 baseline (Fig. 7).
 wkv_gemm  — RWKV6 recurrence with state resident in VMEM.

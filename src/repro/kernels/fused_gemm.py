@@ -1,0 +1,322 @@
+"""Pallas TPU kernel: fused single-pass KMM2/MM1 integer GEMM.
+
+The paper's KMM hardware (Figs. 8-9) wins because the digit pre-adders, the
+three digit-plane multipliers and the post-adder combine live in *one*
+pipeline with no intermediate memory round-trips.  The staged Pallas path in
+:mod:`repro.kernels.ops` approximates that with ~6 HBM passes: ``_planes``
+materializes four int8 plane arrays, ``kmm2_gemm_planes`` reads them back,
+and the Section IV-D zero-point correction plus dequant each cost another
+array-sized pass.  This kernel is the faithful mapping: ONE ``pallas_call``
+that
+
+  * reads the **original** integer operands (narrowest carrier: int8 for
+    ``w <= m``, int16 for the KMM2 window) — no pre-split planes in HBM;
+  * performs the ``h``-split and low-digit centering on the VPU in-register,
+    per (bm, bk)/(bk, bn) tile (the Fig. 8 X-adder vector);
+  * runs the three digit MXU passes (C1, Cs, C0) against persistent int32
+    VMEM accumulators across the K grid — or a single pass when ``w <= m``
+    (MM1 window, no split needed);
+  * accumulates the zero-point rowsum/colsum terms in (bm, 1)/(1, bn) VMEM
+    scratch across the K grid (``rowsum(Abar) = rowsum(A) - Kp*z`` needs the
+    *raw* operand tiles, which the kernel already holds);
+  * applies the KMM post-adder combine **and** the Section IV-D correction
+    in the final K step, optionally followed by a dequant epilogue
+    (per-token ``sx`` row scale x per-channel ``sw`` col scale ->
+    fp32/bf16), so the quantized model path is 2 operand reads + 1 output
+    write.
+
+Numerics are pinned to the staged path bit-for-bit (asserted across the
+pruned tune space by ``tests/test_fused_gemm.py`` / ``tests/test_tune.py``):
+the digit products and row/col sums are exact int32 regardless of tiling,
+and the fp32 combine applies the identical operation sequence
+(``c1*2^2h + (cs-c1-c0)*2^h + c0`` then ``+ (z*row + z*col + z*z*Kp)``), so
+interpret-mode CI can gate the fused kernel against the pure-jnp staged
+mirror with ``np.array_equal``.
+
+``fused_gemm_grouped`` adds a leading expert/group grid axis so MoE expert
+GEMMs ((E, C, K) x (E, K, N)) run as one kernel launch instead of an XLA
+recursion per expert.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+Array = jax.Array
+
+
+def _pad_tail(x: Array, mults) -> Array:
+    """Zero-pad the trailing ``len(mults)`` dims of ``x`` up to multiples."""
+    lead = x.ndim - len(mults)
+    pads = [(0, 0)] * lead + [(0, (-x.shape[lead + i]) % mult)
+                              for i, mult in enumerate(mults)]
+    if any(p for _, p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def _fused_kernel(*refs, h: int, z: int, nk: int, kp: int, split: bool,
+                  fp32_dot: bool, combine_int32: bool, dequant: bool,
+                  grouped: bool, out_dtype):
+    if dequant:
+        a_ref, b_ref, sx_ref, sw_ref, out_ref = refs[:5]
+        scratch = refs[5:]
+    else:
+        a_ref, b_ref, out_ref = refs[:3]
+        scratch = refs[3:]
+    k = pl.program_id(3 if grouped else 2)
+
+    def ld(ref):
+        return ref[0] if grouped else ref[...]
+
+    @pl.when(k == 0)
+    def _init():
+        for r in scratch:
+            r[...] = jnp.zeros_like(r)
+
+    a = ld(a_ref)
+    b = ld(b_ref)
+    if split:
+        acc1_ref, accs_ref, acc0_ref, row_ref, col_ref = scratch
+        mask = (1 << h) - 1
+        # VPU in-register digit split + centering (ops._planes, minus the
+        # four HBM plane arrays).  Digits stay in the int16 operand carrier:
+        # their values fit s8 (w <= 16), so the MXU products are the same
+        # exact int32 the staged s8-plane kernel computes, without an extra
+        # narrowing cast per tile.
+        a1 = jnp.right_shift(a, h)
+        a0 = jnp.bitwise_and(a, mask) - z
+        b1 = jnp.right_shift(b, h)
+        b0 = jnp.bitwise_and(b, mask) - z
+        # Fig. 8 pre-adders (s8-safe within the KMM2 window w <= 2m-2) and
+        # the three sub-MXU passes with persistent int32 accumulation.
+        if fp32_dot:
+            # Exact fp32 digit products (see fused_gemm: digits are
+            # integers <= 2^h, so with block_k <= 2^(24-2h) every partial
+            # sum is an integer below 2^24 — fp32 arithmetic is exact and
+            # the int32 cast is lossless).  This is the MXU's native
+            # number format; on CPU interpret mode it rides the fast
+            # sgemm path instead of the integer-matmul fallback.
+            a1f, a0f = a1.astype(jnp.float32), a0.astype(jnp.float32)
+            b1f, b0f = b1.astype(jnp.float32), b0.astype(jnp.float32)
+            hi = jax.lax.Precision.HIGHEST
+            acc1_ref[...] += jnp.dot(a1f, b1f,
+                                     precision=hi).astype(jnp.int32)
+            accs_ref[...] += jnp.dot(a1f + a0f, b1f + b0f,
+                                     precision=hi).astype(jnp.int32)
+            acc0_ref[...] += jnp.dot(a0f, b0f,
+                                     precision=hi).astype(jnp.int32)
+        else:
+            acc1_ref[...] += jnp.dot(a1, b1,
+                                     preferred_element_type=jnp.int32)
+            accs_ref[...] += jnp.dot(a1 + a0, b1 + b0,
+                                     preferred_element_type=jnp.int32)
+            acc0_ref[...] += jnp.dot(a0, b0,
+                                     preferred_element_type=jnp.int32)
+        # Zero-point sums accumulated across the K grid: rowsum(Abar) =
+        # rowsum(A) - Kp*z, so the raw tiles already in registers suffice.
+        row_ref[...] += jnp.sum(a, axis=1, keepdims=True, dtype=jnp.int32)
+        col_ref[...] += jnp.sum(b, axis=0, keepdims=True, dtype=jnp.int32)
+    else:
+        (acc0_ref,) = scratch
+        acc0_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _combine():
+        if split:
+            c1 = acc1_ref[...]
+            cs = accs_ref[...]
+            c0 = acc0_ref[...]
+            row = row_ref[...] - jnp.int32(kp * z)
+            col = col_ref[...] - jnp.int32(kp * z)
+            if combine_int32:
+                core = (c1 << (2 * h)) + ((cs - c1 - c0) << h) + c0
+                val = core + (z * row + z * col + jnp.int32(z * z * kp))
+            else:
+                c1f = c1.astype(jnp.float32)
+                c0f = c0.astype(jnp.float32)
+                mid = cs.astype(jnp.float32) - c1f - c0f
+                core = c1f * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c0f
+                corr = (z * row.astype(jnp.float32)
+                        + z * col.astype(jnp.float32)
+                        + float(z) * float(z) * float(kp))
+                val = core + corr
+        else:
+            val = acc0_ref[...]
+        if dequant:
+            val = val.astype(jnp.float32) * (ld(sx_ref) * ld(sw_ref))
+        val = val.astype(out_dtype)
+        if grouped:
+            out_ref[0] = val
+        else:
+            out_ref[...] = val
+
+
+def _fp32_dot_ok(h: int, block_k: int) -> bool:
+    """Exact-fp32 digit products: digits (incl. the pre-adder outputs) are
+    integers with magnitude <= 2^h, so every K-dot partial sum over a
+    block_k-deep tile is an integer of magnitude <= block_k * 2^(2h).
+    While that stays <= 2^24 every value is exactly representable in fp32:
+    the MXU-native fp32 pass computes the same integers the s8 path does,
+    bit for bit, and the int32 cast is lossless."""
+    return block_k <= (1 << max(24 - 2 * h, 0))
+
+
+def _resolve(w: int, m: int, dequant: bool, combine_int32: bool, out_dtype,
+             interpret: Optional[bool]):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    split = w > m
+    h = -(-w // 2) if split else 0
+    z = (1 << (h - 1)) if split else 0
+    # Narrowest carrier covering the fused windows: int8 for w <= m (one
+    # MXU pass, no split), int16 for the KMM2 window (w <= 2m - 2 = 14) —
+    # half the HBM operand traffic of the int32 carrier the staged wrapper
+    # hauls through its plane-materialization passes.
+    carrier = jnp.int16 if split else jnp.int8
+    if out_dtype is None:
+        out_dtype = (jnp.float32 if dequant else
+                     jnp.int32 if (combine_int32 or not split) else
+                     jnp.float32)
+    return split, h, z, carrier, jnp.dtype(out_dtype), interpret
+
+
+def _scratch_shapes(split: bool, block_m: int, block_n: int):
+    if not split:
+        return [pltpu.VMEM((block_m, block_n), jnp.int32)]
+    return [pltpu.VMEM((block_m, block_n), jnp.int32)] * 3 + [
+        pltpu.VMEM((block_m, 1), jnp.int32),
+        pltpu.VMEM((1, block_n), jnp.int32),
+    ]
+
+
+def _fused_call(a, b, sx, sw, *, grouped: bool, w: int, m: int,
+                block_m: int, block_n: int, block_k: int,
+                combine_int32: bool, out_dtype, interpret) -> Array:
+    """Shared pallas_call builder; ``grouped`` adds the leading expert grid
+    axis (every BlockSpec gains a size-1 leading block on the group index).
+    """
+    if (sx is None) != (sw is None):
+        raise ValueError("pass both sx and sw for the dequant epilogue")
+    dequant = sx is not None
+    split, h, z, carrier, out_dtype, interpret = _resolve(
+        w, m, dequant, combine_int32, out_dtype, interpret)
+    lead = a.shape[:-2]                  # () dense, (E,) grouped
+    m_dim, k_dim = a.shape[-2:]
+    n_dim = b.shape[-1]
+    a = _pad_tail(a.astype(carrier), (block_m, block_k))
+    b = _pad_tail(b.astype(carrier), (block_k, block_n))
+    mp, kp = a.shape[-2:]
+    np_ = b.shape[-1]
+    body = (mp // block_m, np_ // block_n, kp // block_k)
+    grid = lead + body if grouped else body
+
+    def spec(block, index_map):
+        if grouped:
+            return pl.BlockSpec(
+                (1,) + block,
+                lambda g, i, j, kk, _f=index_map: (g,) + _f(i, j, kk))
+        return pl.BlockSpec(block, index_map)
+
+    kernel = functools.partial(
+        _fused_kernel, h=h, z=z, nk=body[2], kp=kp, split=split,
+        fp32_dot=split and _fp32_dot_ok(h, block_k),
+        combine_int32=combine_int32, dequant=dequant, grouped=grouped,
+        out_dtype=out_dtype)
+    in_specs = [spec((block_m, block_k), lambda i, j, kk: (i, kk)),
+                spec((block_k, block_n), lambda i, j, kk: (kk, j))]
+    operands = [a, b]
+    if dequant:
+        operands += [_pad_tail(sx.astype(jnp.float32), (block_m, 1)),
+                     _pad_tail(sw.astype(jnp.float32), (1, block_n))]
+        in_specs += [spec((block_m, 1), lambda i, j, kk: (i, 0)),
+                     spec((1, block_n), lambda i, j, kk: (0, j))]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=spec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(lead + (mp, np_), out_dtype),
+        scratch_shapes=_scratch_shapes(split, block_m, block_n),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",) * (len(grid) - 1)
+            + ("arbitrary",)),
+        interpret=interpret,
+    )(*operands)
+    return out[..., :m_dim, :n_dim]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w", "m", "block_m", "block_n", "block_k",
+                     "combine_int32", "out_dtype", "interpret"),
+)
+def fused_gemm(
+    a: Array, b: Array, sx: Optional[Array] = None,
+    sw: Optional[Array] = None, *,
+    w: int,
+    m: int = 8,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    combine_int32: bool = False,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Fused integer GEMM on the **original** (M, K) x (K, N) operands.
+
+    ``a``/``b`` hold signed ``w``-bit values in any integer dtype; the
+    wrapper zero-pads to tile multiples (padding commutes with the in-kernel
+    correction: split(0) = (0, -z) and the K term uses padded K) and slices
+    the result back.  ``w <= m`` runs the single-pass MM1 window (core is
+    inherently exact int32, ``combine_int32`` is ignored); ``m < w <= 2m-2``
+    runs the 3-pass KMM2 window.
+
+    With ``sx`` (M, 1) / ``sw`` (1, N) fp32 scales the dequant epilogue
+    ``out = acc * (sx * sw)`` runs in the same kernel (fp32, or ``out_dtype``
+    e.g. bf16) — bit-identical to the staged ``acc * (sx * sw)``
+    post-multiply.  Without scales the output is int32 for exact plans,
+    fp32 otherwise.
+    """
+    return _fused_call(a, b, sx, sw, grouped=False, w=w, m=m,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       combine_int32=combine_int32, out_dtype=out_dtype,
+                       interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w", "m", "block_m", "block_n", "block_k",
+                     "combine_int32", "out_dtype", "interpret"),
+)
+def fused_gemm_grouped(
+    a: Array, b: Array, sx: Optional[Array] = None,
+    sw: Optional[Array] = None, *,
+    w: int,
+    m: int = 8,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    combine_int32: bool = False,
+    out_dtype=None,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Grouped/batched :func:`fused_gemm`: (E, C, K) x (E, K, N) -> (E, C, N).
+
+    The expert axis is a leading parallel grid dimension, so all expert
+    GEMMs of an MoE layer run inside one kernel launch (one set of jits, no
+    per-expert dispatch).  Scales, when given, are (E, C, 1) and (E, 1, N).
+    Per-group results are bit-identical to E independent ``fused_gemm``
+    calls with the same tiles.
+    """
+    return _fused_call(a, b, sx, sw, grouped=True, w=w, m=m,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       combine_int32=combine_int32, out_dtype=out_dtype,
+                       interpret=interpret)

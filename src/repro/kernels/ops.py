@@ -16,6 +16,13 @@ kernels for their pure-jnp mirrors in :mod:`repro.kernels.ref` while keeping
 the padding/correction wrapper identical, which is the bit-exact oracle the
 autotuner checks every candidate against.
 
+The Pallas backend's default route is the fused single-pass kernel
+(kernels/fused_gemm.py, DESIGN.md §11): digit split, MXU passes, zero-point
+correction and optional dequant epilogue inside one pallas_call.  The staged
+pipeline below (_int_gemm_pallas: _planes in HBM -> digit kernel ->
+correction) remains as the MM2/deep-recursion fallback and as the fused
+kernel's bit-exact oracle wrapper (``use_ref_kernels=True``).
+
 Digit handling for the Pallas path (see kmm_gemm.py): split at h = ceil(w/2),
 center the low digit by z = 2^(h-1) so all planes are s8, then fold the
 centering back with the paper's zero-point-adjuster correction:
@@ -27,6 +34,7 @@ with the correction because split(0) = (0, -z) and the K term uses padded K.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -36,6 +44,7 @@ import jax.numpy as jnp
 from repro.core.dispatch import ExecPlan, Mode, select_plan
 from repro.core.kmm import kmm_n, mm_n, max_exact_k
 from repro.kernels.ffip import ffip_gemm_literal
+from repro.kernels.fused_gemm import fused_gemm
 from repro.kernels.kmm_gemm import kmm2_gemm_planes
 from repro.kernels.mm1_gemm import mm1_gemm
 from repro.kernels.mm2_gemm import mm2_gemm_planes
@@ -101,7 +110,6 @@ def int_gemm(
                                        ("block_n", block_n),
                                        ("block_k", block_k)) if v is not None}
         if overrides:
-            import dataclasses
             plan = dataclasses.replace(plan, **overrides)
     out = run_plan(a, b, plan=plan, interpret=interpret)
     if exact:
@@ -125,6 +133,17 @@ def run_plan(a: Array, b: Array, *, plan: ExecPlan,
         return ref_int_gemm(a, b)
     if plan.variant == "ffip":
         return ffip_gemm_literal(a, b)
+    if plan.variant == "fused":
+        if use_ref_kernels:
+            # The staged pure-jnp mirror IS the fused kernel's oracle: the
+            # fused plan's mode/tiles drive the identical padding +
+            # zero-point-correction wrapper below.
+            return _int_gemm_pallas(a, b, plan=plan, interpret=interpret,
+                                    use_ref_kernels=True)
+        bm, bn, bk = plan.tiles
+        return fused_gemm(a, b, w=plan.w, m=plan.m, block_m=bm, block_n=bn,
+                          block_k=bk, combine_int32=plan.combine_int32,
+                          interpret=interpret)
     if plan.backend == "xla":
         return _int_gemm_xla(a, b, plan=plan)
     return _int_gemm_pallas(a, b, plan=plan, interpret=interpret,
@@ -186,11 +205,15 @@ def _int_gemm_pallas(a: Array, b: Array, *, plan: ExecPlan,
         core = kernel(a1, a0, b1, b0, h=h, block_m=block_m, block_n=block_n,
                       block_k=block_k, combine_int32=exact,
                       interpret=interpret)
-    # Zero-point adjuster (paper Section IV-D / prior work [6]).
-    abar = (a1.astype(jnp.int32) << h) + a0.astype(jnp.int32)
-    bbar = (b1.astype(jnp.int32) << h) + b0.astype(jnp.int32)
-    row = abar.sum(axis=1, keepdims=True)     # (M, 1) int32-exact
-    col = bbar.sum(axis=0, keepdims=True)     # (1, N) int32-exact
+    # Zero-point adjuster (paper Section IV-D / prior work [6]).  The digit
+    # identity abar = a - z (elementwise, padded zeros included) gives the
+    # correction sums directly from the padded operands — no abar/bbar
+    # reconstruction, two fewer full-array passes; values are int32-exact
+    # and bit-identical to summing the rebuilt planes.
+    row = (jnp.sum(a, axis=1, keepdims=True, dtype=jnp.int32)
+           - jnp.int32(kp * z))               # (M, 1) rowsum(abar)
+    col = (jnp.sum(b, axis=0, keepdims=True, dtype=jnp.int32)
+           - jnp.int32(kp * z))               # (1, N) colsum(bbar)
     if exact:
         corr = z * row + z * col + jnp.int32(z * z * kp)
         out = core + corr
@@ -208,9 +231,10 @@ def int_gemm_jit(a: Array, b: Array, w: int, m: int = 8,
 
 
 def quantize_symmetric(x: Array, w: int, axis=None):
-    """Symmetric signed w-bit quantization. Returns (q_int32, scale_f32)."""
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
-    qmax = float(2 ** (w - 1) - 1)
-    scale = jnp.maximum(amax, 1e-8) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
-    return q, scale.astype(jnp.float32)
+    """Symmetric signed w-bit quantization. Returns (q_int32, scale_f32).
+
+    Thin alias for :func:`repro.quant.quantize.quantize_symmetric` — the one
+    shared recipe (imported lazily: ``repro.quant``'s package init imports
+    qmatmul, which imports the fused kernel from this package)."""
+    from repro.quant.quantize import quantize_symmetric as _qs
+    return _qs(x, w, axis=axis)

@@ -32,6 +32,10 @@ def main() -> int:
                     help="full config (needs real accelerators)")
     ap.add_argument("--tuning-table", default=None,
                     help="repro.tune table JSON (DESIGN.md §10)")
+    ap.add_argument("--quant-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="quantized-GEMM backend: 'pallas' serves through "
+                         "the fused single-pass kernel (DESIGN.md §11)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -41,7 +45,8 @@ def main() -> int:
     cfg = get_config(args.arch, smoke=not args.full_size, quant=args.quant)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch,
-                    tuning_table=args.tuning_table)
+                    tuning_table=args.tuning_table,
+                    quant_backend=args.quant_backend)
     rng = np.random.default_rng(0)
     stop = (args.eos,) if args.eos >= 0 else ()
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,

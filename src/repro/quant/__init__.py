@@ -1,7 +1,8 @@
 from repro.quant.policy import PrecisionPolicy, QuantConfig
 from repro.quant.qmatmul import quantized_matmul, quantized_matmul_batched
+from repro.quant.quantize import quantize_symmetric
 
 __all__ = [
     "PrecisionPolicy", "QuantConfig",
-    "quantized_matmul", "quantized_matmul_batched",
+    "quantize_symmetric", "quantized_matmul", "quantized_matmul_batched",
 ]

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.quant.policy import QuantConfig
+from repro.quant.quantize import quantize_symmetric, storage_dtype_for
 
 Params = Any
 
@@ -42,11 +43,16 @@ def _site_name(path) -> str:
 
 
 def storage_dtype(bits: int):
-    return jnp.int8 if bits <= 8 else jnp.int16
+    return storage_dtype_for(bits)
 
 
 def prequantize(params: Params, quant: QuantConfig) -> Params:
-    """Replace quantizable weight leaves with {"q", "scale"} records."""
+    """Replace quantizable weight leaves with {"q", "scale"} records.
+
+    Uses the shared :mod:`repro.quant.quantize` recipe (identical rounding
+    to the runtime activation/weight quantizers), so a prequantized serve
+    run is bit-identical to the on-the-fly path for any backend.
+    """
 
     def rule(path, leaf):
         name = _leaf_name(path)
@@ -54,12 +60,9 @@ def prequantize(params: Params, quant: QuantConfig) -> Params:
             return leaf
         bits = quant.bits_for(_site_name(path))
         axis = leaf.ndim - 2            # contraction axis (K)
-        qmax = float(2 ** (bits - 1) - 1)
-        amax = jnp.max(jnp.abs(leaf.astype(jnp.float32)), axis=axis,
-                       keepdims=True)
-        scale = (jnp.maximum(amax, 1e-8) / qmax).astype(jnp.float32)
-        q = jnp.clip(jnp.round(leaf.astype(jnp.float32) / scale), -qmax, qmax)
-        return {"q": q.astype(storage_dtype(bits)), "scale": scale}
+        q, scale = quantize_symmetric(leaf, bits, axis=axis, keepdims=True,
+                                      storage_dtype=storage_dtype_for(bits))
+        return {"q": q, "scale": scale}
 
     return jax.tree_util.tree_map_with_path(rule, params)
 

@@ -9,28 +9,49 @@ architectures are inference-side so STE only affects our training drivers).
 
 Two entry points: ``quantized_matmul`` for (..., K) @ (K, N) dense layers and
 ``quantized_matmul_batched`` for (E, C, K) @ (E, K, N) expert GEMMs.
+
+Backends.  ``backend="xla"`` (default) lowers to ordinary dot_generals (the
+digit recursion of :mod:`repro.core.kmm`) so pjit'd model code stays
+GSPMD-partitionable, then dequantizes with a post-multiply.
+``backend="pallas"`` routes through the fused single-pass kernel
+(:mod:`repro.kernels.fused_gemm`): digit split, MXU passes, zero-point
+correction **and** the dequant epilogue (sx row scale x sw col scale) run in
+one ``pallas_call`` — the scales are threaded into the kernel instead of a
+separate elementwise pass, and expert GEMMs ride the grouped grid axis as a
+single launch.  Plans resolve through the table-backed
+:func:`repro.core.dispatch.select_plan`; when the selected plan cannot run
+fused (e.g. w > 2m-2, digit-accumulator headroom, a table override, or
+``force_mode``), the call falls back to the XLA path.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import math
+from dataclasses import replace
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dispatch import select_plan
-from repro.core.kmm import kmm_n, mm_n
+from repro.core.dispatch import analytic_plan, select_plan
+from repro.core.kmm import kmm_n, max_exact_k, mm_n
+from repro.kernels import ops
+from repro.kernels.fused_gemm import fused_gemm, fused_gemm_grouped
+from repro.quant.quantize import quantize_symmetric
 
 Array = jax.Array
 
+BACKENDS = ("xla", "pallas")
+
 
 def _quantize(x: Array, w: int, axis) -> Tuple[Array, Array]:
-    """Symmetric signed w-bit quantization along ``axis`` (None = per-tensor)."""
-    qmax = float(2 ** (w - 1) - 1)
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = (jnp.maximum(amax, 1e-8) / qmax).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
-    return q.astype(jnp.int32), scale
+    """Symmetric signed w-bit quantization along ``axis`` (None = per-tensor).
+
+    Delegates to the shared :mod:`repro.quant.quantize` recipe with
+    keepdims=True, so fused-epilogue scales and XLA post-multiply scales are
+    produced by identical arithmetic.
+    """
+    return quantize_symmetric(x, w, axis=axis, keepdims=True)
 
 
 def _dot_shape(qx: Array, qw: Array, dims) -> Tuple[int, int, int]:
@@ -79,26 +100,132 @@ def _int_dot(qx: Array, qw: Array, w: int, m: int, dims,
               combine_dtype=jnp.float32)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _pow2_cover(n: int, lo: int = 8) -> int:
+    v = lo
+    while v < n:
+        v *= 2
+    return v
+
+
+def _shrink_tiles(plan, shape):
+    """Clamp the analytic default tiles to the runtime shape (pow2 cover,
+    floor 8): serve-sized GEMMs (decode M = batch, prefill M = bucket)
+    would otherwise pad every operand up to 128x256 tiles.  M/N clamping
+    never affects values (padded rows/cols are sliced away and never enter
+    retained outputs); the K clamp fixes the fp32-class padded K as a pure
+    function of K, applied identically with or without a tuning table —
+    select_plan's padded-K guard only ever adopts table tiles whose padding
+    matches the un-clamped default, which the clamp preserves for every
+    K >= the default block_k."""
+    return replace(plan,
+                   block_m=min(plan.block_m, _pow2_cover(shape[0])),
+                   block_n=min(plan.block_n, _pow2_cover(shape[2])),
+                   block_k=min(plan.block_k, _pow2_cover(shape[1])))
+
+
+def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
+                  dims, out_dtype) -> Optional[Array]:
+    """Run the GEMM + dequant epilogue on the Pallas backend.
+
+    The selected plan is normally the fused single-pass kernel; a tuning
+    table may redirect to a staged Pallas plan *within the same numerics
+    fingerprint class* (select_plan pins it), in which case the staged
+    kernel runs with a post-multiply dequant — bit-identical to the fused
+    epilogue, so installing a table can never move a bit of this backend's
+    output.  Returns None — the XLA fallback — only for reasons that are
+    table-independent: unsupported dot_general dims, w outside the fused
+    windows (the analytic pallas rule is not "fused"), or the runtime shape
+    exceeding the kernel's correctness bounds (digit-accumulator / int32
+    headroom).
+    """
+    from repro.tune.space import digit_accum_k_bound   # lazy: tune -> ops
+
+    dense = qw.ndim == 2 and dims == (((qx.ndim - 1,), (0,)), ((), ()))
+    batched = (qx.ndim == 3 and qw.ndim == 3
+               and dims == (((2,), (1,)), ((0,), (0,))))
+    if not dense and not batched:
+        return None
+    if dense:
+        k_dim = qx.shape[-1]
+        n_dim = qw.shape[1]
+        m_dim = math.prod(qx.shape[:-1])
+    else:
+        _, m_dim, k_dim = qx.shape
+        n_dim = qw.shape[2]
+    shape = (m_dim, k_dim, n_dim)
+    if analytic_plan(w, m, backend="pallas").variant != "fused":
+        return None                     # MM2 window / deep recursion
+    plan = select_plan(shape, w, m=m, backend="pallas")
+    if plan.source == "analytic":
+        plan = _shrink_tiles(plan, shape)
+    # Correctness bounds (identical with or without a table; outside them
+    # the XLA fallback applies either way, keeping numerics table-free).
+    if plan.is_exact_int and max_exact_k(w) < k_dim:
+        return None
+    kp = -(-k_dim // plan.block_k) * plan.block_k
+    if w > m and kp > digit_accum_k_bound(w):
+        return None
+    if plan.variant == "fused":
+        plan = replace(plan, epilogue="dequant")
+        if dense:
+            out = fused_gemm(
+                qx.reshape(m_dim, k_dim), qw,
+                sx.reshape(m_dim, 1), sw.reshape(1, n_dim),
+                w=w, m=m, block_m=plan.block_m, block_n=plan.block_n,
+                block_k=plan.block_k, combine_int32=plan.combine_int32,
+                out_dtype=out_dtype)
+            return out.reshape(qx.shape[:-1] + (n_dim,))
+        return fused_gemm_grouped(
+            qx, qw, sx, sw, w=w, m=m, block_m=plan.block_m,
+            block_n=plan.block_n, block_k=plan.block_k,
+            combine_int32=plan.combine_int32, out_dtype=out_dtype)
+    # Table/prior redirect inside the pinned fingerprint class: run the
+    # selected plan through the production seam and dequant afterwards.
+    if dense:
+        acc = ops.run_plan(qx.reshape(m_dim, k_dim), qw, plan=plan)
+        out = (acc.astype(jnp.float32)
+               * (sx.reshape(m_dim, 1) * sw.reshape(1, n_dim)))
+        return out.astype(out_dtype).reshape(qx.shape[:-1] + (n_dim,))
+    accs = [ops.run_plan(qx[e], qw[e], plan=plan)
+            for e in range(qx.shape[0])]
+    acc = jnp.stack(accs).astype(jnp.float32)
+    return (acc * (sx * sw)).astype(out_dtype)
+
+
+def _quant_gemm(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
+                dims, force_mode: str, backend: str, out_dtype) -> Array:
+    """Dequantized GEMM: fused Pallas kernel when routed, XLA otherwise."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choices {BACKENDS}")
+    if backend == "pallas" and force_mode == "auto":
+        out = _fused_pallas(qx, qw, sx, sw, w, m, dims, out_dtype)
+        if out is not None:
+            return out
+    acc = _int_dot(qx, qw, w, m, dims, force_mode)
+    return (acc * (sx * sw)).astype(out_dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def quantized_matmul(x: Array, wmat: Array, w_bits: int, m: int = 8,
-                     force_mode: str = "auto") -> Array:
+                     force_mode: str = "auto",
+                     backend: str = "xla") -> Array:
     """(..., K) @ (K, N) quantized to ``w_bits``; returns x.dtype."""
-    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode)
+    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend)
 
 
-def _qmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto"):
+def _qmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
     qx, sx = _quantize(x, w_bits, axis=-1)            # per-token
     qw, sw = _quantize(wmat, w_bits, axis=0)          # per-out-channel
     dims = (((x.ndim - 1,), (0,)), ((), ()))
-    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
-    return (acc * (sx * sw)).astype(x.dtype)
+    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, force_mode, backend,
+                       x.dtype)
 
 
-def _qmm_fwd(x, wmat, w_bits, m, force_mode="auto"):
-    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode), (x, wmat)
+def _qmm_fwd(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
+    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend), (x, wmat)
 
 
-def _qmm_bwd(w_bits, m, force_mode, res, g):
+def _qmm_bwd(w_bits, m, force_mode, backend, res, g):
     x, wmat = res
     gf = g.astype(jnp.float32)
     dx = jnp.einsum("...n,kn->...k", gf, wmat.astype(jnp.float32))
@@ -111,26 +238,32 @@ def _qmm_bwd(w_bits, m, force_mode, res, g):
 quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
 def quantized_matmul_batched(x: Array, wmat: Array, w_bits: int,
-                             m: int = 8, force_mode: str = "auto") -> Array:
-    """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``."""
-    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode)
+                             m: int = 8, force_mode: str = "auto",
+                             backend: str = "xla") -> Array:
+    """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``.
+
+    On ``backend="pallas"`` all experts run as ONE grouped fused-kernel
+    launch (expert axis = leading parallel grid dim) instead of an XLA
+    ``kmm_n`` recursion over batched dot_generals.
+    """
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend)
 
 
-def _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto"):
+def _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
     qx, sx = _quantize(x, w_bits, axis=-1)            # per (expert, row)
     qw, sw = _quantize(wmat, w_bits, axis=1)          # per (expert, channel)
     dims = (((2,), (1,)), ((0,), (0,)))
-    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
-    return (acc * (sx * sw)).astype(x.dtype)
+    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, force_mode, backend,
+                       x.dtype)
 
 
-def _qbmm_fwd(x, wmat, w_bits, m, force_mode="auto"):
-    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode), (x, wmat)
+def _qbmm_fwd(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend), (x, wmat)
 
 
-def _qbmm_bwd(w_bits, m, force_mode, res, g):
+def _qbmm_bwd(w_bits, m, force_mode, backend, res, g):
     x, wmat = res
     gf = g.astype(jnp.float32)
     dx = jnp.einsum("ecn,ekn->eck", gf, wmat.astype(jnp.float32))
@@ -142,33 +275,38 @@ quantized_matmul_batched.defvjp(_qbmm_fwd, _qbmm_bwd)
 
 
 def prequant_matmul(x: Array, wrec, w_bits: int, m: int = 8,
-                    force_mode: str = "auto", batched: bool = False) -> Array:
+                    force_mode: str = "auto", batched: bool = False,
+                    backend: str = "xla") -> Array:
     """Serving path on pre-quantized weights ({"q", "scale"} records): skips
     the runtime weight quantization (see quant/prequant.py).  Inference-only
-    (not differentiable)."""
+    (not differentiable).  ``backend="pallas"`` threads the stored
+    per-channel scale straight into the fused kernel's dequant epilogue."""
     qx, sx = _quantize(x, w_bits, axis=-1)
     qw = wrec["q"].astype(jnp.int32)
-    dims = (((2,), (1,)), ((0,), (0,))) if batched         else (((x.ndim - 1,), (0,)), ((), ()))
-    acc = _int_dot(qx, qw, w_bits, m, dims, force_mode)
-    return (acc * (sx * wrec["scale"])).astype(x.dtype)
+    dims = (((2,), (1,)), ((0,), (0,))) if batched \
+        else (((x.ndim - 1,), (0,)), ((), ()))
+    return _quant_gemm(qx, qw, sx, wrec["scale"], w_bits, m, dims,
+                       force_mode, backend, x.dtype)
 
 
 def maybe_quantized_matmul(x: Array, wmat: Array, quant, name: str) -> Array:
     """Dense matmul that routes through the quantized KMM path when enabled."""
     if isinstance(wmat, dict):
         return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
-                               quant.force_mode)
+                               quant.force_mode, backend=quant.backend)
     if quant is not None and quant.enabled:
         return quantized_matmul(x, wmat, quant.bits_for(name), quant.m,
-                                quant.force_mode)
+                                quant.force_mode, quant.backend)
     return jnp.einsum("...k,kn->...n", x, wmat.astype(x.dtype))
 
 
 def maybe_quantized_batched(x: Array, wmat: Array, quant, name: str) -> Array:
     if isinstance(wmat, dict):
         return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
-                               quant.force_mode, batched=True)
+                               quant.force_mode, batched=True,
+                               backend=quant.backend)
     if quant is not None and quant.enabled:
         return quantized_matmul_batched(x, wmat, quant.bits_for(name),
-                                        quant.m, quant.force_mode)
+                                        quant.m, quant.force_mode,
+                                        quant.backend)
     return jnp.einsum("eck,ekn->ecn", x, wmat.astype(x.dtype))

@@ -145,10 +145,26 @@ class Engine:
                  batch_size: int = 4, rng_seed: int = 0,
                  mesh: Optional[Mesh] = None,
                  prompt_buckets: Optional[Sequence[int]] = None,
-                 tuning_table: Optional[Any] = None):
+                 tuning_table: Optional[Any] = None,
+                 quant_backend: Optional[str] = None):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "continuous batching does not support encoder-decoder models")
+        if quant_backend is not None:
+            # Rewrite the model's quantized-GEMM backend before any jit
+            # traces: "pallas" serves through the fused single-pass kernel
+            # (digit split + zero-point correction + dequant epilogue in one
+            # pallas_call, DESIGN.md §11), "xla" through plain dot_generals.
+            import dataclasses
+            cfg = cfg.with_quant(
+                dataclasses.replace(cfg.quant, backend=quant_backend))
+        if mesh is not None and getattr(cfg.quant, "backend", "xla") != "xla":
+            # Checked on the EFFECTIVE config (whether the backend came via
+            # quant_backend= or was already set on cfg.quant): pallas
+            # kernels are not GSPMD-partitionable.
+            raise ValueError(
+                "quant backend 'pallas' is single-device: GSPMD cannot "
+                "partition a pallas_call; drop mesh= or use 'xla'")
         if tuning_table is not None:
             # Installs the PROCESS-GLOBAL registry before any jit below
             # traces (jit caches keep the plans active at trace time).

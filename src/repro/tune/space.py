@@ -36,7 +36,7 @@ FFIP_MAX_ELEMS = 1 << 20
 VMEM_BUDGET = 12 * 1024 * 1024
 MAX_DEPTH = 3
 
-_N_ACCUM = {"mm1": 1, "kmm2": 3, "mm2": 4}
+_N_ACCUM = {"mm1": 1, "kmm2": 3, "mm2": 4, "fused": 3}
 
 
 def _tile_ok(block: int, dim: int) -> bool:
@@ -92,7 +92,35 @@ def validate(plan: ExecPlan, shape: Shape, *,
             return "ffip is inherently exact; combine_int32 must be True"
         return None
 
-    if plan.variant == "mm1":
+    if plan.variant == "fused":
+        # Single-pass kernel: in-kernel digit split + correction + epilogue
+        # (kernels/fused_gemm.py).  Covers the MM1 window (w <= m, no split)
+        # and the single-level KMM2 window (m < w <= 2m - 2).
+        if plan.backend != "pallas":
+            return "fused kernel is pallas-only"
+        if w <= m:
+            if plan.depth != 0:
+                return f"fused MM1 window is depth 0, got {plan.depth}"
+            if not plan.combine_int32:
+                return ("fused MM1-window core is inherently exact; "
+                        "combine_int32 must be True")
+            if max_exact_k(w) < K:
+                return (f"fused mm1 overflows int32: K={K} > "
+                        f"max_exact_k={max_exact_k(w)}")
+        else:
+            if plan.depth != 1:
+                return "fused kernel implements single-level KMM2"
+            if w > 2 * m - 2:
+                return (f"fused kmm2 pre-adder digits exceed s8 for "
+                        f"w={w} > {2*m - 2}")
+            kp = -(-K // plan.block_k) * plan.block_k
+            if kp > digit_accum_k_bound(w):
+                return (f"digit accumulators overflow int32: padded K={kp} > "
+                        f"{digit_accum_k_bound(w)}")
+            if plan.combine_int32 and max_exact_k(w) < K:
+                return (f"int32 combine fails headroom: K={K} > "
+                        f"max_exact_k({w})={max_exact_k(w)}")
+    elif plan.variant == "mm1":
         if w > m:
             return f"mm1 needs w <= m ({w} > {m})"
         if plan.backend == "xla":
@@ -151,10 +179,21 @@ def validate(plan: ExecPlan, shape: Shape, *,
             if plan.block_m % 32:
                 return f"TPU s8 sublane: block_m={plan.block_m} % 32 != 0"
         n_acc = _N_ACCUM.get(plan.variant, 1)
-        planes = 1 if plan.variant == "mm1" else 2
-        vmem = (planes * (plan.block_m * plan.block_k
-                          + plan.block_k * plan.block_n)        # s8 inputs
-                + (n_acc + 1) * plan.block_m * plan.block_n * 4)  # i32 acc+out
+        if plan.variant == "fused":
+            # Raw-operand tiles (int8 carrier in the MM1 window, int16
+            # above it), 1 or 3 digit accumulators, plus the zero-point
+            # rowsum/colsum scratch and the dequant-epilogue scale tiles.
+            opd = 1 if plan.w <= plan.m else 2
+            n_acc = 1 if plan.w <= plan.m else 3
+            vmem = (opd * (plan.block_m * plan.block_k
+                           + plan.block_k * plan.block_n)
+                    + (n_acc + 1) * plan.block_m * plan.block_n * 4
+                    + 4 * 2 * (plan.block_m + plan.block_n))
+        else:
+            planes = 1 if plan.variant == "mm1" else 2
+            vmem = (planes * (plan.block_m * plan.block_k
+                              + plan.block_k * plan.block_n)    # s8 inputs
+                    + (n_acc + 1) * plan.block_m * plan.block_n * 4)  # acc+out
         if vmem > VMEM_BUDGET:
             return f"VMEM footprint {vmem} > {VMEM_BUDGET}"
     return None
@@ -198,6 +237,11 @@ def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                 yield from emit(ExecPlan(
                     "mm1", w, m, backend="pallas", block_m=bm, block_n=bn,
                     block_k=bk, combine_int32=True, depth=0, source="space"))
+                for ci in ((True,) if w <= m else (False, True)):
+                    yield from emit(ExecPlan(
+                        "fused", w, m, backend="pallas", block_m=bm,
+                        block_n=bn, block_k=bk, combine_int32=ci,
+                        depth=0 if w <= m else 1, source="space"))
                 for variant in ("kmm2", "mm2"):
                     for ci in (False, True):
                         yield from emit(ExecPlan(
@@ -234,13 +278,23 @@ def cost_prior(plan: ExecPlan, shape: Shape) -> float:
         if plan.variant == "mm1" or n == 1:
             mults, combine = float(Mp * Np * Kp), 0.0
         else:
-            fn = kmm_complexity if plan.variant == "kmm2" else mm_complexity
+            fn = kmm_complexity if plan.variant in ("kmm2", "fused") \
+                else mm_complexity
             ops = fn(n, plan.w, 1)            # d=1: per-product / per-output
             mults = ops.total_of(MULT) * Mp * Np * Kp
             combine = (ops.total_of(ADD) + ops.total_of(SHIFT)) * Mp * Np
     # fp32 combine costs one extra cast/round per accumulator per output.
-    if not plan.combine_int32 and plan.variant in ("kmm2", "mm2"):
+    if not plan.combine_int32 and plan.variant in ("kmm2", "mm2", "fused"):
         combine += _N_ACCUM[plan.variant] * Mp * Np
+    # Memory-traffic asymmetry of the Pallas digit paths: the staged kernels
+    # materialize four digit-plane arrays in HBM and rebuild the zero-point
+    # sums in two more passes; the fused kernel splits in-register but
+    # recomputes each operand tile's split once per reuse across the other
+    # grid axis.
+    if plan.backend == "pallas" and plan.variant in ("kmm2", "mm2"):
+        combine += 3.0 * (Mp * Kp + Kp * Np)
+    elif plan.variant == "fused" and plan.w > plan.m:
+        combine += 0.5 * (Mp * Kp * (Np // bn) + Kp * Np * (Mp // bm))
     return mults + combine + 512.0 * grid
 
 

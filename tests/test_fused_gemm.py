@@ -1,0 +1,302 @@
+"""Fused single-pass kernel (kernels/fused_gemm.py): bit-identity against the
+staged Pallas path and the ref.py oracle across hostile tile/padding combos,
+the exact-int32 boundary, the grouped expert grid, and the dequant epilogue.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dispatch import ExecPlan, analytic_plan, select_plan
+from repro.core.kmm import max_exact_k
+from repro.kernels import ops
+from repro.kernels.fused_gemm import fused_gemm, fused_gemm_grouped
+from repro.kernels.ref import ref_int_gemm_i64
+from repro.quant.qmatmul import (
+    prequant_matmul, quantized_matmul, quantized_matmul_batched,
+)
+from repro.tune import runner, space
+
+# Non-multiple M/N/K, 1-row/1-col extremes, K-padding that exercises the
+# z-correction on padded rows (split(0) = (0, -z) must cancel exactly).
+HOSTILE_SHAPES = [(33, 70, 17), (1, 64, 1), (130, 70, 50)]
+TILE_COMBOS = [(32, 32, 32), (64, 32, 64), (32, 64, 256)]
+
+
+def _staged_variant(w: int, m: int = 8) -> str:
+    return "mm1" if w <= m else "kmm2"
+
+
+def _plans(w: int, tiles, combine_int32: bool):
+    bm, bn, bk = tiles
+    depth = 0 if w <= 8 else 1
+    fused = ExecPlan("fused", w, backend="pallas", block_m=bm, block_n=bn,
+                     block_k=bk, combine_int32=combine_int32, depth=depth)
+    staged = ExecPlan(_staged_variant(w), w, backend="pallas", block_m=bm,
+                      block_n=bn, block_k=bk, combine_int32=combine_int32,
+                      depth=depth)
+    return fused, staged
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bit-identity vs the staged path + the ref.py oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [4, 8, 12, 14])
+@pytest.mark.parametrize("mkn", HOSTILE_SHAPES)
+def test_fused_bit_identical_to_staged_and_mirror(w, mkn):
+    """Same tiles, same padding: the fused kernel must reproduce the staged
+    Pallas pipeline AND the pure-jnp staged mirror bit-for-bit — fp32
+    combine included (identical operation sequence, not a tolerance)."""
+    a, b = runner.make_operands(mkn, w, seed=w)
+    oracle = ref_int_gemm_i64(np.asarray(a), np.asarray(b))
+    for tiles in TILE_COMBOS:
+        fused, staged = _plans(w, tiles, combine_int32=w <= 8)
+        out = np.asarray(ops.run_plan_jit(a, b, fused))
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, staged)),
+            err_msg=f"fused != staged at w={w} tiles={tiles}")
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, fused,
+                                             use_ref_kernels=True)),
+            err_msg=f"fused != jnp mirror at w={w} tiles={tiles}")
+        if fused.is_exact_int:
+            np.testing.assert_array_equal(out.astype(np.int64), oracle)
+
+
+@pytest.mark.parametrize("w", [4, 8, 12, 14])
+def test_fused_pruned_space_candidates_pass_the_gate(w):
+    """Every fused plan the pruned tune space emits must pass the runner's
+    bit-exact correctness gate (the same gate the autotuner applies)."""
+    shape = (16, 32, 16)
+    cands = [p for p in space.pruned_space(shape, w, backend="pallas",
+                                           tile_choices=(32, 64))
+             if p.variant == "fused"]
+    assert cands, f"no fused candidates at w={w}"
+    a, b = runner.make_operands(shape, w, seed=w)
+    for plan in cands:
+        ok, err = runner.check_plan(plan, a, b)
+        assert ok, (plan, err)
+
+
+def test_fused_analytic_default_covers_windows():
+    """backend='pallas' analytic dispatch: fused for MM1 + KMM2 windows,
+    staged MM2 above, staged recursion for w > 16."""
+    for w in (4, 8):
+        plan = analytic_plan(w, backend="pallas")
+        assert plan.variant == "fused" and plan.is_exact_int
+    for w in (9, 12, 14):
+        plan = analytic_plan(w, backend="pallas")
+        assert plan.variant == "fused" and plan.depth == 1
+    assert analytic_plan(15, backend="pallas").variant == "mm2"
+    assert analytic_plan(16, backend="pallas").variant == "mm2"
+    assert analytic_plan(20, backend="pallas").variant == "kmm2"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: exact-int32 mode at the max_exact_k boundary.
+# ---------------------------------------------------------------------------
+
+
+def test_fused_exact_int32_at_max_exact_k_boundary():
+    w = 12
+    k = max_exact_k(w)                       # 128: the tight int32 ceiling
+    a, b = runner.make_operands((16, k, 16), w, seed=3)
+    plan = ExecPlan("fused", w, backend="pallas", block_m=32, block_n=32,
+                    block_k=32, combine_int32=True, depth=1)
+    assert space.validate(plan, (16, k, 16)) is None
+    out = np.asarray(ops.run_plan_jit(a, b, plan))
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(
+        out.astype(np.int64),
+        ref_int_gemm_i64(np.asarray(a), np.asarray(b)))
+    # one past the boundary: the pruner must reject the plan, and the
+    # int_gemm API must refuse an exact request outright
+    assert space.validate(plan, (16, k + 1, 16)) is not None
+    with pytest.raises(ValueError, match="max exact K"):
+        ops.int_gemm(jnp.zeros((16, k + 1), jnp.int32),
+                     jnp.zeros((k + 1, 16), jnp.int32),
+                     w=w, backend="pallas", exact=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: grouped expert grid vs a per-expert loop.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [8, 12])
+def test_fused_grouped_matches_per_expert_loop(w):
+    e, c, k, n = 3, 10, 70, 9
+    rng = np.random.default_rng(w)
+    lim = 2 ** (w - 1)
+    a = jnp.asarray(rng.integers(-lim, lim, (e, c, k)), jnp.int32)
+    b = jnp.asarray(rng.integers(-lim, lim, (e, k, n)), jnp.int32)
+    kw = dict(w=w, block_m=32, block_n=32, block_k=32)
+    grouped = np.asarray(fused_gemm_grouped(a, b, **kw))
+    for i in range(e):
+        single = np.asarray(fused_gemm(a[i], b[i], **kw))
+        np.testing.assert_array_equal(grouped[i], single,
+                                      err_msg=f"expert {i} diverged")
+        if w <= 8:
+            np.testing.assert_array_equal(
+                grouped[i].astype(np.int64),
+                ref_int_gemm_i64(np.asarray(a[i]), np.asarray(b[i])))
+
+
+def test_fused_grouped_dequant_epilogue():
+    e, c, k, n = 2, 6, 33, 5
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-2048, 2048, (e, c, k)), jnp.int32)
+    b = jnp.asarray(rng.integers(-2048, 2048, (e, k, n)), jnp.int32)
+    sx = jnp.asarray(rng.random((e, c, 1)), jnp.float32)
+    sw = jnp.asarray(rng.random((e, 1, n)), jnp.float32)
+    kw = dict(w=12, block_m=32, block_n=32, block_k=32)
+    out = np.asarray(fused_gemm_grouped(a, b, sx, sw, **kw))
+    acc = np.asarray(fused_gemm_grouped(a, b, **kw))
+    np.testing.assert_array_equal(out, acc * np.asarray(sx * sw))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: dequant epilogue == staged dequant, exact fp32 equality.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [8, 12])
+def test_dequant_epilogue_equals_staged_dequant(w):
+    m, k, n = 17, 70, 9
+    a, b = runner.make_operands((m, k, n), w, seed=w)
+    rng = np.random.default_rng(w)
+    sx = jnp.asarray(rng.random((m, 1)), jnp.float32)
+    sw = jnp.asarray(rng.random((1, n)), jnp.float32)
+    kw = dict(w=w, block_m=32, block_n=32, block_k=64)
+    fused = np.asarray(fused_gemm(a, b, sx, sw, **kw))
+    acc = np.asarray(fused_gemm(a, b, **kw)).astype(np.float32)
+    staged_dequant = acc * np.asarray(sx * sw)
+    np.testing.assert_array_equal(fused, staged_dequant)
+
+
+@pytest.mark.parametrize("w", [4, 8])
+def test_quantized_matmul_pallas_bit_identical_to_xla_exact_class(w):
+    """In the exact-int class (w <= m) the fused pallas route computes the
+    same integer as the XLA dot, and the in-kernel epilogue multiplies the
+    same scales in the same order — outputs are bit-identical."""
+    rng = np.random.default_rng(w)
+    x = jnp.asarray(rng.standard_normal((4, 16, 32)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)
+    xla = np.asarray(quantized_matmul(x, wm, w))
+    pal = np.asarray(quantized_matmul(x, wm, w, 8, "auto", "pallas"))
+    np.testing.assert_array_equal(xla, pal)
+    # batched expert path, one grouped kernel launch
+    xb = jnp.asarray(rng.standard_normal((3, 8, 32)), jnp.float32)
+    wb = jnp.asarray(rng.standard_normal((3, 32, 8)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(quantized_matmul_batched(xb, wb, w)),
+        np.asarray(quantized_matmul_batched(xb, wb, w, 8, "auto", "pallas")))
+
+
+def test_quantized_matmul_pallas_w12_close_and_bf16():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    xla = np.asarray(quantized_matmul(x, wm, 12))
+    pal = np.asarray(quantized_matmul(x, wm, 12, 8, "auto", "pallas"))
+    denom = max(np.abs(xla).max(), 1.0)
+    assert np.abs(xla - pal).max() / denom < 1e-6   # same value, fp32 class
+    out = quantized_matmul(x.astype(jnp.bfloat16), wm, 12, 8, "auto",
+                           "pallas")
+    assert out.dtype == jnp.bfloat16                # epilogue casts in-kernel
+
+
+def test_prequant_matmul_pallas_route():
+    from repro.quant.policy import POLICY_W8
+    from repro.quant.prequant import prequantize
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 5, 32)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((32, 12)), jnp.float32)
+    rec = prequantize({"wi": wm}, POLICY_W8)["wi"]
+    assert rec["q"].dtype == jnp.int8               # narrow storage carrier
+    np.testing.assert_array_equal(
+        np.asarray(prequant_matmul(x, rec, 8)),
+        np.asarray(prequant_matmul(x, rec, 8, backend="pallas")))
+
+
+def test_pallas_route_falls_back_outside_fused_windows():
+    """w=16 is the MM2 window (no fused kernel): the pallas backend must
+    fall back to the XLA path, bit-identically."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(quantized_matmul(x, wm, 16)),
+        np.asarray(quantized_matmul(x, wm, 16, 8, "auto", "pallas")))
+    assert select_plan((4, 32, 8), 16, backend="pallas").variant == "mm2"
+
+
+# ---------------------------------------------------------------------------
+# Dispatch/tuning seam: fused plans stay in the staged fingerprint class.
+# ---------------------------------------------------------------------------
+
+
+def test_table_can_swap_fused_and_staged_without_moving_bits():
+    """A tuning table recording a staged kmm2 winner is adopted over the
+    fused analytic default (same fp32 fingerprint class + same K padding)
+    and must not change a single output bit."""
+    from repro.tune.table import TuningTable, use_table
+
+    w, shape = 12, (64, 128, 64)
+    a, b = runner.make_operands(shape, w, seed=1)
+    base = np.asarray(ops.int_gemm(a, b, w=w, backend="pallas"))
+    t = TuningTable()
+    t.put("pallas", shape, w,
+          ExecPlan("kmm2", w, backend="pallas", block_m=32, block_n=32,
+                   block_k=256, combine_int32=False, depth=1))
+    with use_table(t):
+        plan = select_plan(shape, w, backend="pallas")
+        assert plan.variant == "kmm2" and plan.source == "table"
+        tabled = np.asarray(ops.int_gemm(a, b, w=w, backend="pallas"))
+    np.testing.assert_array_equal(base, tabled)
+
+
+def test_quantized_matmul_pallas_table_never_moves_bits():
+    """Numerics pinning holds on the pallas backend too: a table that
+    redirects the fused plan to a staged pallas plan (same fingerprint
+    class) must leave quantized_matmul(backend='pallas') bit-identical —
+    the redirect runs the staged kernel, never the XLA rounding class."""
+    from repro.tune.table import TuningTable, use_table
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((256, 64)), jnp.float32)
+    t = TuningTable()
+    t.put("pallas", (8, 256, 64), 12,
+          ExecPlan("kmm2", 12, backend="pallas", block_m=32, block_n=64,
+                   block_k=256, combine_int32=False, depth=1))
+    for w in (8, 12):
+        base = np.asarray(quantized_matmul(x, wm, w, 8, "auto", "pallas"))
+        with use_table(t):
+            tabled = np.asarray(quantized_matmul(x, wm, w, 8, "auto",
+                                                 "pallas"))
+        np.testing.assert_array_equal(base, tabled, err_msg=f"w={w}")
+
+
+def test_pallas_route_actually_runs_fused_at_serve_shapes():
+    """Tiny-M decode/prefill GEMMs must ride the fused kernel (clamped
+    tiles), not silently fall back to XLA: in the fp32 class the pallas
+    rounding differs from XLA's digit recursion at large K, which is
+    observable — so assert the route by checking the pallas result equals
+    the fused kernel's output computed directly."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)   # decode M=2
+    wm = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    from repro.quant.qmatmul import _quantize, _shrink_tiles
+
+    qx, sx = _quantize(x, 12, axis=-1)
+    qw, sw = _quantize(wm, 12, axis=0)
+    plan = _shrink_tiles(analytic_plan(12, backend="pallas"), (2, 64, 48))
+    assert plan.tiles == (8, 64, 64)
+    direct = np.asarray(fused_gemm(
+        qx, qw, sx, sw, w=12, block_m=plan.block_m, block_n=plan.block_n,
+        block_k=plan.block_k, out_dtype=jnp.float32))
+    routed = np.asarray(quantized_matmul(x, wm, 12, 8, "auto", "pallas"))
+    np.testing.assert_array_equal(routed, direct)

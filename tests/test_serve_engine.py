@@ -298,3 +298,41 @@ def test_tuning_table_changes_no_tokens(tmp_path):
         assert base == tuned
     finally:
         set_active_table(None)
+
+
+# ---------------------------------------------------------------------------
+# PR-5 acceptance: backend="pallas" serves through the fused kernel with
+# token-identical output vs the XLA backend (default, non-tabled dispatch).
+# ---------------------------------------------------------------------------
+
+
+def test_serve_quant_backend_pallas_token_identical(tiny):
+    cfg, params = tiny
+    spec = [(5, 4, 0.0, ()), (9, 3, 0.8, ()), (3, 4, 0.0, ())]
+
+    def run(backend, quant):
+        qcfg = cfg.with_quant(get_config("llama3.2-1b", smoke=True,
+                                         quant=quant).quant)
+        eng = Engine(qcfg, params, max_seq=32, batch_size=2, rng_seed=5,
+                     quant_backend=backend)
+        reqs = _mk_requests(qcfg, spec)
+        eng.generate(reqs)
+        return [r.generated for r in reqs]
+
+    # w8: the exact-int class makes the fused epilogue bit-identical to the
+    # XLA dequant, so logits — and therefore tokens, greedy AND sampled —
+    # cannot differ.
+    assert run("xla", "w8") == run("pallas", "w8")
+    # w12: the fused kernel is in the staged-pallas fp32 class; at serve
+    # scale the accumulators stay integer-exact in fp32, so tokens match
+    # the XLA digit recursion too.
+    assert run("xla", "w12") == run("pallas", "w12")
+
+
+def test_engine_rejects_pallas_backend_under_mesh(tiny):
+    cfg, params = tiny
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    with pytest.raises(ValueError, match="single-device"):
+        Engine(cfg, params, max_seq=16, batch_size=1, mesh=mesh,
+               quant_backend="pallas")
