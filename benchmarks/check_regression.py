@@ -16,6 +16,16 @@ they are already dimensionless.  The default ``--match`` set gates on the
 int_gemm rows plus the fused-over-staged *ratio* rows (interleaved-paired
 in bench_walltime, so correlated noise bursts cancel), not the raw
 fused_/staged_ microsecond rows.
+
+Serve-throughput rows are gated too: pass ``--serve-baseline
+BENCH_serve.json --serve-new /tmp/bench/BENCH_serve.json`` and the
+``tokens_per_s`` of every serve row is compared *higher-is-better*,
+normalized by the single-slot row in the same file (host speed cancels; the
+gated quantity is the batching-scaling curve, e.g. slots4/slots1 falling
+off a cliff).  The serve rows use their own looser ``--serve-tol`` (default
+50%): the scaling curve swings ±25% run-to-run from scheduler noise on
+shared CI hosts, so the serve gate is a cliff detector, not a
+percent-level tracker like the interleaved GEMM ratios.
 """
 from __future__ import annotations
 
@@ -24,20 +34,27 @@ import json
 import sys
 from typing import Dict
 
+SERVE_NORMALIZE = "serve/llama3.2-1b/slots1"
 
-def load_rows(path: str) -> Dict[str, float]:
+
+def load_rows(path: str, metric: str = "us_per_call") -> Dict[str, float]:
     with open(path) as f:
         doc = json.load(f)
     out = {}
     for row in doc.get("rows", []):
-        name, us = row.get("name"), row.get("us_per_call")
-        if name and isinstance(us, (int, float)) and us > 0:
-            out[str(name)] = float(us)
+        name, val = row.get("name"), row.get(metric)
+        if name and isinstance(val, (int, float)) and val > 0:
+            out[str(name)] = float(val)
     return out
 
 
 def compare(base: Dict[str, float], new: Dict[str, float], tol: float,
-            match, normalize: str = "") -> int:
+            match, normalize: str = "", higher_better: bool = False) -> int:
+    """Print a comparison table; return the number of regressed/dropped rows.
+
+    ``higher_better`` flips the direction (throughput rows): a row regresses
+    when the new value falls more than ``tol`` below baseline.
+    """
     def norm(rows: Dict[str, float], name: str) -> float:
         if "ratio" in name or not normalize:
             return rows[name]
@@ -54,7 +71,7 @@ def compare(base: Dict[str, float], new: Dict[str, float], tol: float,
     n_fail = 0
     for name in shared:
         b, v = norm(base, name), norm(new, name)
-        reg = v / b - 1.0
+        reg = (b / v - 1.0) if higher_better else (v / b - 1.0)
         status = "ok"
         if reg > tol:
             status = f"REGRESSED > {tol:.0%}"
@@ -87,11 +104,34 @@ def main(argv=None) -> int:
     ap.add_argument("--normalize", default="",
                     help="row name to divide all non-ratio rows by "
                          "(cancels host speed for cross-machine runs)")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed BENCH_serve.json: gates tokens_per_s "
+                         "of the serve rows (higher-is-better)")
+    ap.add_argument("--serve-new", default=None,
+                    help="fresh BENCH_serve.json to compare against "
+                         "--serve-baseline")
+    ap.add_argument("--serve-normalize", default=SERVE_NORMALIZE,
+                    help="serve row to divide throughputs by within each "
+                         "file (single-slot row: the gate then tracks the "
+                         "batching-scaling curve, not host speed)")
+    ap.add_argument("--serve-tol", type=float, default=0.5,
+                    help="tolerance for the serve rows (looser than --tol: "
+                         "the scaling curve rides scheduler noise on shared "
+                         "CI hosts; 0.5 still catches a slot-scaling cliff)")
     args = ap.parse_args(argv)
     n_fail = compare(load_rows(args.baseline), load_rows(args.new),
                      args.tol, tuple(args.match), args.normalize)
+    if (args.serve_baseline is None) != (args.serve_new is None):
+        raise SystemExit("--serve-baseline and --serve-new go together")
+    if args.serve_new is not None:
+        print()
+        n_fail += compare(
+            load_rows(args.serve_baseline, metric="tokens_per_s"),
+            load_rows(args.serve_new, metric="tokens_per_s"),
+            args.serve_tol, ("serve/",), args.serve_normalize,
+            higher_better=True)
     if n_fail:
-        print(f"\n{n_fail} GEMM row(s) regressed beyond {args.tol:.0%}")
+        print(f"\n{n_fail} row(s) regressed beyond tolerance")
         return 1
     print("\nno GEMM regressions beyond tolerance")
     return 0

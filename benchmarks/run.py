@@ -48,6 +48,7 @@ def write_bench_json(group: str, rows, checks, out_dir: str) -> str:
         "checks": [{"claim": c, "ok": bool(ok), "detail": d}
                    for c, ok, d in checks],
     }
+    os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{group}.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True, default=str)
@@ -68,17 +69,20 @@ def main() -> None:
     ap.add_argument("--tuning-table", default=None,
                     help="repro.tune table JSON to install before running")
     ap.add_argument("--only", default=None,
-                    choices=["paper_tables", "walltime", "serve", "roofline"],
+                    choices=["paper_tables", "walltime", "serve", "sharded",
+                             "roofline"],
                     help="run a single benchmark group (e.g. the CI "
                          "bench-regression step runs --only walltime)")
     args = ap.parse_args()
 
     if args.tuning_table:
+        from repro.core.context import ExecContext
         from repro.tune import set_active_table
-        set_active_table(args.tuning_table)
+        set_active_table(
+            ExecContext(tuning_table=args.tuning_table).resolve_table())
 
-    from benchmarks import bench_roofline, bench_serve, bench_walltime, \
-        paper_tables
+    from benchmarks import bench_roofline, bench_serve, bench_sharded, \
+        bench_walltime, paper_tables
 
     csv_lines = ["name,us_per_call,derived"]
     check_lines = []
@@ -111,6 +115,12 @@ def main() -> None:
     if wants("serve") and not args.skip_serve:
         rows = bench_serve.run()
         record("serve", rows, bench_serve.checks(rows))
+
+    if wants("sharded") and not args.skip_walltime:
+        # shard-mapped pallas vs GSPMD XLA on a 2x4 host-device mesh
+        # (own subprocess: device count must be set before jax init)
+        rows = bench_sharded.run()
+        record("sharded", rows, bench_sharded.checks(rows))
 
     if wants("roofline"):
         record("roofline", bench_roofline.run(args.dryrun_dir), [])

@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.context import ExecContext
 from repro.core.dispatch import conv_mults_per_product, select_mode
 from repro.models import lm
 from repro.models.config import count_params
@@ -30,8 +31,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--full-size", action="store_true")
-    ap.add_argument("--quant-backend", default="xla",
-                    choices=["xla", "pallas"],
+    ap.add_argument("--backend", "--quant-backend", dest="backend",
+                    default="xla", choices=["xla", "pallas"],
                     help="'pallas' routes every quantized matmul through "
                          "the fused single-pass kernel (DESIGN.md §11)")
     args = ap.parse_args()
@@ -42,7 +43,7 @@ def main():
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=96, batch_size=args.batch,
-                    quant_backend=args.quant_backend)
+                    context=ExecContext(backend=args.backend))
     rng = np.random.default_rng(0)
     # ragged prompts + mixed budgets: the continuous-batching scheduler
     # admits each request into the first freed slot (no group barrier)

@@ -1,0 +1,146 @@
+"""ExecContext: one frozen bundle for "how do GEMMs execute here".
+
+Before this module, the knobs that pick an execution path were scattered as
+ad-hoc kwargs — ``backend=`` on :func:`repro.kernels.ops.int_gemm`,
+``quant_backend=`` on the serve :class:`~repro.serve.engine.Engine`,
+``tuning_table=`` in three places, ``mesh=`` in two, ``force_mode`` threaded
+positionally through the ``custom_vjp`` entry points.  ``ExecContext`` is the
+single replacement: a frozen dataclass carrying
+
+  * ``backend``      — "xla" (plain dot_generals, GSPMD-partitionable) or
+                       "pallas" (the fused single-pass KMM kernel);
+  * ``mesh``         — a ``jax.sharding.Mesh`` when GEMMs should run
+                       shard-mapped (see :mod:`repro.dist.shard_gemm`), or
+                       None for single-device / ambient-GSPMD execution;
+  * ``tuning_table`` — a :class:`repro.tune.TuningTable` (or a path to one)
+                       consulted by plan selection, without mutating the
+                       process-global registry;
+  * ``force_mode``   — "auto" (the paper's dispatch rule) or "mm2" (the
+                       conventional-baseline override used by benchmarks).
+
+It is hashable (the table is excluded from eq/hash — tables are
+numerics-pinned, so two contexts differing only in table compute identical
+values) and is consumed at trace time, never inside traced computations.
+
+Migration table (DESIGN.md §12):
+
+    old kwarg                              new spelling
+    -------------------------------------  --------------------------------
+    quantized_matmul(..., backend="p")     quantized_matmul(..., context=ctx)
+    quantized_matmul(..., force_mode="m")  ctx = ExecContext(force_mode="m")
+    Engine(..., quant_backend="pallas")    Engine(..., context=ctx)
+    Engine(..., tuning_table=path)         ctx = ExecContext(tuning_table=path)
+    select_plan(..., backend=, table=)     select_plan(..., context=ctx)
+    int_gemm(..., backend="pallas")        int_gemm(..., context=ctx)
+    TrainConfig(tuning_table=path)         TrainConfig(context=ctx)
+
+The old kwargs keep working through :func:`resolve_context` shims that emit
+one ``DeprecationWarning`` naming every legacy kwarg used.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+__all__ = ["ExecContext", "resolve_context"]
+
+
+@dataclass(frozen=True)
+class ExecContext:
+    """Execution context for the integer-GEMM stack (see module docstring).
+
+    A context is *authoritative* where it is passed: ``Engine(context=ctx)``
+    rewrites the model's quant policy to ``ctx.backend``/``ctx.force_mode``,
+    and ``quantized_matmul(..., context=ctx)`` executes on ``ctx.backend``
+    regardless of defaults.  Pass ``context=None`` (the default everywhere)
+    to keep the call site's historical behaviour.
+    """
+
+    backend: str = "xla"            # "xla" | "pallas"
+    mesh: Optional[Any] = None      # jax.sharding.Mesh | None
+    # Excluded from eq/hash: TuningTable is a mutable dataclass, and tables
+    # are numerics-pinned — they change speed, never values — so contexts
+    # differing only in table are interchangeable as static/cache keys.
+    tuning_table: Optional[Any] = field(default=None, compare=False)
+    force_mode: str = "auto"        # "auto" | "mm2"
+
+    def __post_init__(self):
+        if self.backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"choices ('xla', 'pallas')")
+        if self.force_mode not in ("auto", "mm2"):
+            raise ValueError(f"unknown force_mode {self.force_mode!r}; "
+                             f"choices ('auto', 'mm2')")
+
+    # -- helpers ------------------------------------------------------------
+
+    def replace(self, **kw) -> "ExecContext":
+        return dataclasses.replace(self, **kw)
+
+    def resolve_table(self):
+        """The context's table as a loaded TuningTable (paths are loaded
+        lazily, once per call — callers that care should pass the loaded
+        object), or None."""
+        if self.tuning_table is None:
+            return None
+        from repro.tune.table import TuningTable
+        if isinstance(self.tuning_table, TuningTable):
+            return self.tuning_table
+        return TuningTable.load(self.tuning_table)
+
+    def activate(self):
+        """Context manager installing ``tuning_table`` into the process-global
+        registry for the enclosed trace (no-op when the context carries no
+        table — the currently active table, if any, stays in effect)."""
+        if self.tuning_table is None:
+            return contextlib.nullcontext()
+        from repro.tune.table import use_table
+        return use_table(self.tuning_table)
+
+    def local_gemm_shape(self, shape: Tuple[int, int, int]
+                         ) -> Tuple[int, int, int]:
+        """Per-shard (M, K, N) of a GEMM under this context's mesh (the
+        canonical serve sharding: M over data axes, N over model, K
+        replicated).  Identity without a mesh."""
+        if self.mesh is None:
+            return shape
+        from repro.tune.space import local_shape
+        return local_shape(shape, self.mesh)
+
+
+def resolve_context(context: Optional[ExecContext], *, what: str,
+                    backend: Optional[str] = None,
+                    force_mode: Optional[str] = None,
+                    tuning_table: Optional[Any] = None,
+                    mesh: Optional[Any] = None,
+                    _defaults: Optional[ExecContext] = None) -> ExecContext:
+    """Fold legacy kwargs into an :class:`ExecContext` (the deprecation shim).
+
+    ``None`` legacy values mean "not passed".  Passing any legacy kwarg emits
+    ONE ``DeprecationWarning`` listing all of them; passing legacy kwargs
+    *and* ``context`` together is an error (ambiguous).  ``_defaults`` seeds
+    the context the legacy values are folded into (callers with historical
+    defaults other than ExecContext()'s pass them here).
+    """
+    legacy = {k: v for k, v in (("backend", backend),
+                                ("force_mode", force_mode),
+                                ("tuning_table", tuning_table),
+                                ("mesh", mesh)) if v is not None}
+    if context is not None:
+        if legacy:
+            raise TypeError(
+                f"{what}: pass either context= or the deprecated "
+                f"{sorted(legacy)} kwargs, not both")
+        return context
+    base = _defaults if _defaults is not None else ExecContext()
+    if not legacy:
+        return base
+    warnings.warn(
+        f"{what}: the {sorted(legacy)} kwarg(s) are deprecated; pass "
+        f"context=repro.core.context.ExecContext(...) instead "
+        f"(DESIGN.md §12 migration table)",
+        DeprecationWarning, stacklevel=3)
+    return base.replace(**legacy)

@@ -136,6 +136,27 @@ _TILED_VARIANTS = ("mm1", "kmm2", "mm2", "fused")
 
 
 @dataclass(frozen=True)
+class GemmShardSpec:
+    """How one GEMM's (M, K, N) dims map onto mesh axes.
+
+    ``m_axes``/``n_axes`` shard the output tile grid (each shard runs the
+    kernel on its local block; no cross-shard arithmetic, so values are
+    bit-identical to the unsharded kernel).  ``k_axes`` splits the
+    contraction: each shard computes a partial product and the results are
+    ``psum``-combined — exact for exact-int plans (int32 partials sum to the
+    true product), but a *different fp32 rounding* for fp32-combine plans,
+    which is why ``k_axes`` participates in :func:`numerics_fingerprint` and
+    the model-facing negotiation in :mod:`repro.dist.shard_gemm` never
+    proposes it for fp32 plans.
+    """
+
+    m_axes: Tuple[str, ...] = ()
+    n_axes: Tuple[str, ...] = ()
+    k_axes: Tuple[str, ...] = ()
+    e_axes: Tuple[str, ...] = ()   # expert/group dim of grouped GEMMs
+
+
+@dataclass(frozen=True)
 class ExecPlan:
     """A fully-resolved way to execute one integer GEMM.
 
@@ -160,6 +181,11 @@ class ExecPlan:
     # call-site property, never persisted in tuning tables — quant/qmatmul
     # stamps it onto the selected plan before running.
     epilogue: str = "none"
+    # Mesh layout for shard-mapped execution (repro.dist.shard_gemm); None
+    # runs the kernel unsharded.  A call-site property like ``epilogue`` —
+    # stamped by the sharded dispatch path, never persisted in tables
+    # (table.put() serializes only _ENTRY_FIELDS).
+    shard: Optional[GemmShardSpec] = None
 
     @property
     def digits(self) -> int:
@@ -202,11 +228,18 @@ def numerics_fingerprint(plan: ExecPlan):
     the *identical* fp32 operation sequence as the staged Pallas KMM2 path
     (asserted by tests/test_fused_gemm.py), so it shares that class; the
     epilogue is part of the fingerprint because a dequantized output is a
-    different value than the raw accumulator."""
+    different value than the raw accumulator.
+
+    Sharding (DESIGN.md §12): M/N sharding replicates K, so every output
+    element sees the full-K arithmetic of the unsharded kernel — not part of
+    the fingerprint.  K sharding splits the fp32 accumulation order, so
+    ``shard.k_axes`` IS part of the fp32 fingerprint (exact-int plans sum
+    int32 partials exactly and stay in the "exact" class)."""
     if plan.is_exact_int:
         return ("exact", plan.epilogue)
     variant = "kmm2" if plan.variant == "fused" else plan.variant
-    return ("fp32", variant, plan.depth, plan.backend, plan.epilogue)
+    k_axes = plan.shard.k_axes if plan.shard is not None else ()
+    return ("fp32", variant, plan.depth, plan.backend, plan.epilogue, k_axes)
 
 
 DEFAULT_TILES = (128, 128, 256)
@@ -242,8 +275,18 @@ def _padded(dim: int, block: int) -> int:
 
 def select_plan(shape: Tuple[int, int, int], w: int, *, m: int = 8,
                 backend: str = "xla", exact: bool = False,
-                table=None, pin_numerics: bool = True) -> ExecPlan:
+                table=None, pin_numerics: bool = True,
+                context=None) -> ExecPlan:
     """Table-backed execution-plan selection for an (M, K, N) integer GEMM.
+
+    ``context`` (an :class:`repro.core.context.ExecContext`) supersedes the
+    scattered kwargs: its ``backend`` wins over ``backend=``, its
+    ``tuning_table`` is consulted (without touching the process-global
+    registry), and under ``context.mesh`` with the pallas backend the table
+    key and validation run on the *per-shard local shape* — the shard-mapped
+    kernel tiles its local block, so local M/N (and the VMEM/accumulator
+    bounds on the local K) are what a table entry must fit
+    (``repro.tune.space.local_shape``).
 
     Resolution order:
 
@@ -265,6 +308,14 @@ def select_plan(shape: Tuple[int, int, int], w: int, *, m: int = 8,
     fp32 correction terms round differently.  Tuning therefore never changes
     ``quantized_matmul`` results, only how fast they are computed.
     """
+    if context is not None:
+        backend = context.backend
+        if table is None and context.tuning_table is not None:
+            table = context.resolve_table()
+        if context.mesh is not None and backend == "pallas":
+            # The shard-mapped kernel runs on the local block: key the
+            # table and validate bounds on the per-shard shape.
+            shape = context.local_gemm_shape(shape)
     base = analytic_plan(w, m, backend=backend, exact=exact)
     if table is None:
         from repro.tune import table as tune_table   # lazy: core must not

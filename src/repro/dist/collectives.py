@@ -89,18 +89,28 @@ def _prep_rhs(w: Array, w_bits: Optional[int]):
     return quantize_symmetric(w, w_bits)
 
 
-def _shard_matmul(a: Array, qb: Array, sb, w_bits: Optional[int]) -> Array:
-    """One shard-chunk GEMM; integer path when a bitwidth is supplied."""
+def _shard_matmul(a: Array, qb: Array, sb, w_bits: Optional[int],
+                  context=None) -> Array:
+    """One shard-chunk GEMM; integer path when a bitwidth is supplied.
+
+    ``context`` (an :class:`repro.core.context.ExecContext`) picks the
+    backend for the chunk GEMMs.  Its mesh is stripped before the call: the
+    ring already runs inside its own ``shard_map``, so each chunk is a
+    single-shard GEMM — re-entering :mod:`repro.dist.shard_gemm` from here
+    would nest shard_maps.
+    """
     if w_bits is None:
         return jnp.dot(a.astype(jnp.float32), qb)
     from repro.kernels.ops import int_gemm, quantize_symmetric
 
+    if context is not None and context.mesh is not None:
+        context = context.replace(mesh=None)
     qa, sa = quantize_symmetric(a, w_bits)
-    return int_gemm(qa, qb, w=w_bits) * sa * sb
+    return int_gemm(qa, qb, w=w_bits, context=context) * sa * sb
 
 
 def ring_ag_matmul(x_shard: Array, w: Array, axis_name: str, *,
-                   w_bits: Optional[int] = None) -> Array:
+                   w_bits: Optional[int] = None, context=None) -> Array:
     """Ring all-gather matmul: ``concat_shards(x) @ w`` without ever
     materializing the gathered LHS.
 
@@ -109,7 +119,8 @@ def ring_ag_matmul(x_shard: Array, w: Array, axis_name: str, *,
     currently held against ``w`` while ``ppermute`` forwards it to the next
     neighbour, so the hop transfer overlaps the local GEMM (the classic
     collective-matmul overlap).  With ``w_bits`` set, each per-shard chunk
-    routes through the paper's integer GEMM.
+    routes through the paper's integer GEMM, on the backend picked by
+    ``context`` (chunks always run single-shard — see ``_shard_matmul``).
 
     Returns the full ``(rows_total, n)`` product, replicated on every shard.
     """
@@ -125,7 +136,7 @@ def ring_ag_matmul(x_shard: Array, w: Array, axis_name: str, *,
         # The block in hand originated on shard (idx - i) mod n: its product
         # lands at that shard's row offset in the gathered output.
         src = jax.lax.rem(idx - i + n, n)
-        part = _shard_matmul(block, qb, sb, w_bits)
+        part = _shard_matmul(block, qb, sb, w_bits, context=context)
         out = jax.lax.dynamic_update_slice(out, part, (src * rows, 0))
         if i + 1 < n:
             block = jax.lax.ppermute(block, axis_name, perm)

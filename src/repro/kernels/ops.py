@@ -82,6 +82,7 @@ def int_gemm(
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     plan: Optional[ExecPlan] = None,
+    context=None,
 ) -> Array:
     """Integer GEMM with precision-scalable dispatch (paper Fig. 10).
 
@@ -94,7 +95,16 @@ def int_gemm(
     installed; explicit ``block_*`` arguments always win.  ``plan`` bypasses
     selection entirely and executes the given :class:`ExecPlan` (the
     autotuner's entry point).
+
+    ``context`` (an :class:`repro.core.context.ExecContext`) supplies
+    backend / tuning table / mesh in one object; with ``context.mesh`` set
+    and the pallas backend, the kernel runs shard-mapped over the mesh
+    (:mod:`repro.dist.shard_gemm`) on negotiated M/N axes.  The mesh is
+    never inferred from ambient state here — collective helpers that call
+    ``int_gemm`` from inside their own ``shard_map`` stay single-shard.
     """
+    if context is not None:
+        backend = context.backend
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
     m_dim, k_dim = a.shape
@@ -105,13 +115,14 @@ def int_gemm(
             f"max exact K is {max_exact_k(w)}")
     if plan is None:
         plan = select_plan((m_dim, k_dim, n_dim), w, m=m, backend=backend,
-                           exact=exact)
+                           exact=exact, context=context)
         overrides = {k: v for k, v in (("block_m", block_m),
                                        ("block_n", block_n),
                                        ("block_k", block_k)) if v is not None}
         if overrides:
             plan = dataclasses.replace(plan, **overrides)
-    out = run_plan(a, b, plan=plan, interpret=interpret)
+    mesh = context.mesh if context is not None else None
+    out = run_plan(a, b, plan=plan, interpret=interpret, mesh=mesh)
     if exact:
         return out
     return out if out.dtype == jnp.float32 else out.astype(jnp.float32)
@@ -119,7 +130,8 @@ def int_gemm(
 
 def run_plan(a: Array, b: Array, *, plan: ExecPlan,
              interpret: Optional[bool] = None,
-             use_ref_kernels: bool = False) -> Array:
+             use_ref_kernels: bool = False,
+             mesh=None, context=None) -> Array:
     """Execute one :class:`ExecPlan` on (M, K) x (K, N) integer operands.
 
     Output dtype follows the plan: int32 for exact-int plans
@@ -128,7 +140,24 @@ def run_plan(a: Array, b: Array, *, plan: ExecPlan,
     mirrors in :mod:`repro.kernels.ref` instead of the Pallas kernels —
     identical padding/correction wrapper, bit-identical result — giving the
     tuner its correctness oracle.
+
+    With ``mesh`` (or ``context.mesh``) set and a pallas-backend plan, the
+    plan executes shard-mapped (:func:`repro.dist.shard_gemm
+    .sharded_run_plan`): each shard runs the identical kernel on its local
+    block — covering the fused kernel AND the staged fallback variants —
+    with M/N axes from ``plan.shard`` (negotiated when unset).  XLA-backend
+    plans ignore the mesh (plain dot_generals partition via GSPMD).
     """
+    if mesh is None and context is not None:
+        mesh = context.mesh
+    if mesh is not None and plan.backend == "pallas" \
+            and not getattr(mesh, "empty", False):
+        from repro.dist.shard_gemm import sharded_run_plan
+        return sharded_run_plan(a, b, plan=plan, mesh=mesh,
+                                interpret=interpret,
+                                use_ref_kernels=use_ref_kernels)
+    if plan.shard is not None:
+        plan = dataclasses.replace(plan, shard=None)
     if plan.variant == "xla_ref":
         return ref_int_gemm(a, b)
     if plan.variant == "ffip":
@@ -151,14 +180,19 @@ def run_plan(a: Array, b: Array, *, plan: ExecPlan,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("plan", "interpret", "use_ref_kernels"))
+                   static_argnames=("plan", "interpret", "use_ref_kernels",
+                                    "mesh", "context"))
 def run_plan_jit(a: Array, b: Array, plan: ExecPlan,
                  interpret: Optional[bool] = None,
-                 use_ref_kernels: bool = False) -> Array:
+                 use_ref_kernels: bool = False,
+                 mesh=None, context=None) -> Array:
     """jit'd :func:`run_plan` (ExecPlan is frozen/hashable, so it is a
-    static arg — one trace per plan)."""
+    static arg — one trace per plan).  ``mesh``/``context`` are static too
+    (Mesh and ExecContext both hash; the context's table is excluded from
+    its hash and is irrelevant here — the plan is already resolved)."""
     return run_plan(a, b, plan=plan, interpret=interpret,
-                    use_ref_kernels=use_ref_kernels)
+                    use_ref_kernels=use_ref_kernels, mesh=mesh,
+                    context=context)
 
 
 def _int_gemm_xla(a: Array, b: Array, *, plan: ExecPlan) -> Array:

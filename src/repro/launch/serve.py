@@ -32,21 +32,31 @@ def main() -> int:
                     help="full config (needs real accelerators)")
     ap.add_argument("--tuning-table", default=None,
                     help="repro.tune table JSON (DESIGN.md §10)")
-    ap.add_argument("--quant-backend", default="xla",
-                    choices=["xla", "pallas"],
+    ap.add_argument("--backend", "--quant-backend", dest="backend",
+                    default="xla", choices=["xla", "pallas"],
                     help="quantized-GEMM backend: 'pallas' serves through "
-                         "the fused single-pass kernel (DESIGN.md §11)")
+                         "the fused single-pass kernel (DESIGN.md §11); "
+                         "with --mesh it runs shard-mapped (DESIGN.md §12)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve sharded on a (data, model) mesh, e.g. 2x4 "
+                         "(needs data*model visible devices)")
     args = ap.parse_args()
 
     from repro.configs import get_config
+    from repro.core.context import ExecContext
     from repro.models import lm
     from repro.serve.engine import Engine, Request
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(tuple(int(x) for x in args.mesh.split("x")))
+    ctx = ExecContext(backend=args.backend, mesh=mesh,
+                      tuning_table=args.tuning_table)
     cfg = get_config(args.arch, smoke=not args.full_size, quant=args.quant)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch,
-                    tuning_table=args.tuning_table,
-                    quant_backend=args.quant_backend)
+                    context=ctx)
     rng = np.random.default_rng(0)
     stop = (args.eos,) if args.eos >= 0 else ()
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,

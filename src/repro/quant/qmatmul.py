@@ -10,6 +10,12 @@ architectures are inference-side so STE only affects our training drivers).
 Two entry points: ``quantized_matmul`` for (..., K) @ (K, N) dense layers and
 ``quantized_matmul_batched`` for (E, C, K) @ (E, K, N) expert GEMMs.
 
+Execution is configured by an :class:`repro.core.context.ExecContext`
+(``context=`` kwarg): backend, mesh, tuning table and force_mode in one
+frozen bundle.  The legacy positional ``force_mode``/``backend`` kwargs keep
+working through a shim that emits ``DeprecationWarning`` (DESIGN.md §12
+migration table).
+
 Backends.  ``backend="xla"`` (default) lowers to ordinary dot_generals (the
 digit recursion of :mod:`repro.core.kmm`) so pjit'd model code stays
 GSPMD-partitionable, then dequantizes with a post-multiply.
@@ -18,10 +24,14 @@ GSPMD-partitionable, then dequantizes with a post-multiply.
 correction **and** the dequant epilogue (sx row scale x sw col scale) run in
 one ``pallas_call`` — the scales are threaded into the kernel instead of a
 separate elementwise pass, and expert GEMMs ride the grouped grid axis as a
-single launch.  Plans resolve through the table-backed
-:func:`repro.core.dispatch.select_plan`; when the selected plan cannot run
-fused (e.g. w > 2m-2, digit-accumulator headroom, a table override, or
-``force_mode``), the call falls back to the XLA path.
+single launch.  With ``context.mesh`` set, the kernel runs *shard-mapped*
+over the mesh (:mod:`repro.dist.shard_gemm`): M over the data axes, N over
+``model``, K replicated — bit-identical to the unsharded kernel — with
+capability negotiation falling back to XLA (logged, per GEMM) when no mesh
+axis tiles the problem or the local-K bounds fail.  Plans resolve through
+the table-backed :func:`repro.core.dispatch.select_plan`; when the selected
+plan cannot run fused (e.g. w > 2m-2, digit-accumulator headroom, a table
+override, or ``force_mode``), the call falls back to the XLA path.
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.context import ExecContext, resolve_context
 from repro.core.dispatch import analytic_plan, select_plan
 from repro.core.kmm import kmm_n, max_exact_k, mm_n
 from repro.kernels import ops
@@ -116,15 +127,108 @@ def _shrink_tiles(plan, shape):
     function of K, applied identically with or without a tuning table —
     select_plan's padded-K guard only ever adopts table tiles whose padding
     matches the un-clamped default, which the clamp preserves for every
-    K >= the default block_k."""
+    K >= the default block_k.
+
+    Under a mesh this is called with the per-shard LOCAL shape: K is
+    replicated by the negotiated layout, so the K clamp (hence the fp32
+    padded K) is identical to the unsharded call — the M/N clamps adapt to
+    the local block, which never moves a bit.
+    """
     return replace(plan,
                    block_m=min(plan.block_m, _pow2_cover(shape[0])),
                    block_n=min(plan.block_n, _pow2_cover(shape[2])),
                    block_k=min(plan.block_k, _pow2_cover(shape[1])))
 
 
+def _fused_plan_for(shape, w: int, m: int, context: Optional[ExecContext]):
+    """Resolve + tile-clamp the pallas plan for a (local) GEMM shape, and
+    check the kernel's correctness bounds.  Returns None on any bound
+    failure (the XLA fallback applies, table-independent)."""
+    from repro.tune.space import digit_accum_k_bound   # lazy: tune -> ops
+
+    m_dim, k_dim, n_dim = shape
+    table = context.resolve_table() if context is not None else None
+    plan = select_plan(shape, w, m=m, backend="pallas", table=table)
+    if plan.source == "analytic":
+        plan = _shrink_tiles(plan, shape)
+    # Correctness bounds (identical with or without a table; outside them
+    # the XLA fallback applies either way, keeping numerics table-free).
+    if plan.is_exact_int and max_exact_k(w) < k_dim:
+        return None
+    kp = -(-k_dim // plan.block_k) * plan.block_k
+    if w > m and kp > digit_accum_k_bound(w):
+        return None
+    return plan
+
+
+def _sharded_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int,
+                    m: int, dense: bool, shape, out_dtype,
+                    context: ExecContext) -> Optional[Array]:
+    """Shard-mapped pallas GEMM under ``context.mesh`` (DESIGN.md §12).
+
+    Each shard runs the unmodified kernel on its local block; the
+    zero-point correction and digit accumulators stay per-shard (inside the
+    kernel), and with K replicated no collective touches the accumulators —
+    sharded output is bit-identical to the unsharded fused output.  Returns
+    None — the logged XLA fallback — when no mesh axis tiles the GEMM or
+    the plan fails its bounds on the local shape.
+    """
+    from repro.dist import shard_gemm as sg
+
+    mesh = context.mesh
+    n_experts = None if dense else qx.shape[0]
+    spec, reason = sg.negotiate(shape, mesh, n_experts=n_experts)
+    if spec is None:
+        sg.log_fallback(shape, w, reason)
+        return None
+    lshape = sg.local_shape(shape, spec, mesh)
+    plan = _fused_plan_for(lshape, w, m, context)
+    if plan is None:
+        sg.log_fallback(shape, w, "local-K kernel bounds failed")
+        return None
+    ok, reason = sg.plan_local_bounds_ok(plan, lshape, w, m)
+    if not ok:
+        sg.log_fallback(shape, w, reason)
+        return None
+    m_dim, k_dim, n_dim = shape
+    if plan.variant == "fused":
+        plan = replace(plan, epilogue="dequant", shard=spec)
+
+        def local_fused(qxl, qwl, sxl, swl):
+            fn = fused_gemm if dense else fused_gemm_grouped
+            return fn(qxl, qwl, sxl, swl, w=w, m=m, block_m=plan.block_m,
+                      block_n=plan.block_n, block_k=plan.block_k,
+                      combine_int32=plan.combine_int32, out_dtype=out_dtype)
+
+        if dense:
+            f = sg.shard_dense_gemm(local_fused, mesh, spec)
+            out = f(qx.reshape(m_dim, k_dim), qw,
+                    sx.reshape(m_dim, 1), sw.reshape(1, n_dim))
+            return out.reshape(qx.shape[:-1] + (n_dim,))
+        return sg.shard_grouped_gemm(local_fused, mesh, spec)(qx, qw, sx, sw)
+    # Table/prior redirect inside the pinned fingerprint class: run the
+    # staged plan shard-mapped through the production seam, dequant after.
+    plan = replace(plan, shard=spec)
+    if dense:
+        acc = sg.sharded_run_plan(qx.reshape(m_dim, k_dim), qw, plan=plan,
+                                  mesh=mesh)
+        out = (acc.astype(jnp.float32)
+               * (sx.reshape(m_dim, 1) * sw.reshape(1, n_dim)))
+        return out.astype(out_dtype).reshape(qx.shape[:-1] + (n_dim,))
+    local_plan = replace(plan, shard=None)
+
+    def local_staged(qxl, qwl, sxl, swl):
+        accs = [ops.run_plan(qxl[e], qwl[e], plan=local_plan)
+                for e in range(qxl.shape[0])]
+        acc = jnp.stack(accs).astype(jnp.float32)
+        return (acc * (sxl * swl)).astype(out_dtype)
+
+    return sg.shard_grouped_gemm(local_staged, mesh, spec)(qx, qw, sx, sw)
+
+
 def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
-                  dims, out_dtype) -> Optional[Array]:
+                  dims, out_dtype,
+                  context: Optional[ExecContext] = None) -> Optional[Array]:
     """Run the GEMM + dequant epilogue on the Pallas backend.
 
     The selected plan is normally the fused single-pass kernel; a tuning
@@ -136,10 +240,10 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
     table-independent: unsupported dot_general dims, w outside the fused
     windows (the analytic pallas rule is not "fused"), or the runtime shape
     exceeding the kernel's correctness bounds (digit-accumulator / int32
-    headroom).
+    headroom).  With ``context.mesh`` set the kernel runs shard-mapped
+    (:func:`_sharded_pallas`); capability-negotiation failures there also
+    return None, with a logged reason.
     """
-    from repro.tune.space import digit_accum_k_bound   # lazy: tune -> ops
-
     dense = qw.ndim == 2 and dims == (((qx.ndim - 1,), (0,)), ((), ()))
     batched = (qx.ndim == 3 and qw.ndim == 3
                and dims == (((2,), (1,)), ((0,), (0,))))
@@ -155,15 +259,12 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
     shape = (m_dim, k_dim, n_dim)
     if analytic_plan(w, m, backend="pallas").variant != "fused":
         return None                     # MM2 window / deep recursion
-    plan = select_plan(shape, w, m=m, backend="pallas")
-    if plan.source == "analytic":
-        plan = _shrink_tiles(plan, shape)
-    # Correctness bounds (identical with or without a table; outside them
-    # the XLA fallback applies either way, keeping numerics table-free).
-    if plan.is_exact_int and max_exact_k(w) < k_dim:
-        return None
-    kp = -(-k_dim // plan.block_k) * plan.block_k
-    if w > m and kp > digit_accum_k_bound(w):
+    if context is not None and context.mesh is not None \
+            and not getattr(context.mesh, "empty", False):
+        return _sharded_pallas(qx, qw, sx, sw, w, m, dense, shape,
+                               out_dtype, context)
+    plan = _fused_plan_for(shape, w, m, context)
+    if plan is None:
         return None
     if plan.variant == "fused":
         plan = replace(plan, epilogue="dequant")
@@ -193,39 +294,46 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
 
 
 def _quant_gemm(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
-                dims, force_mode: str, backend: str, out_dtype) -> Array:
+                dims, context: ExecContext, out_dtype) -> Array:
     """Dequantized GEMM: fused Pallas kernel when routed, XLA otherwise."""
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; choices {BACKENDS}")
-    if backend == "pallas" and force_mode == "auto":
-        out = _fused_pallas(qx, qw, sx, sw, w, m, dims, out_dtype)
+    if context.backend not in BACKENDS:
+        raise ValueError(f"unknown backend {context.backend!r}; "
+                         f"choices {BACKENDS}")
+    if context.backend == "pallas" and context.force_mode == "auto":
+        out = _fused_pallas(qx, qw, sx, sw, w, m, dims, out_dtype,
+                            context=context)
         if out is not None:
             return out
-    acc = _int_dot(qx, qw, w, m, dims, force_mode)
+    acc = _int_dot(qx, qw, w, m, dims, context.force_mode)
     return (acc * (sx * sw)).astype(out_dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def quantized_matmul(x: Array, wmat: Array, w_bits: int, m: int = 8,
-                     force_mode: str = "auto",
-                     backend: str = "xla") -> Array:
-    """(..., K) @ (K, N) quantized to ``w_bits``; returns x.dtype."""
-    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend)
+# ---------------------------------------------------------------------------
+# custom_vjp cores (STE backward).  The public entry points below are plain
+# shims that resolve an ExecContext and call these; the context is a
+# hashable nondiff arg (its tuning table is excluded from eq/hash and is
+# installed around the traced call by the shim instead).
+# ---------------------------------------------------------------------------
 
 
-def _qmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _qmm_core(x: Array, wmat: Array, w_bits: int, m: int,
+              context: ExecContext) -> Array:
+    return _qmm_fwd_impl(x, wmat, w_bits, m, context)
+
+
+def _qmm_fwd_impl(x, wmat, w_bits, m, context):
     qx, sx = _quantize(x, w_bits, axis=-1)            # per-token
     qw, sw = _quantize(wmat, w_bits, axis=0)          # per-out-channel
     dims = (((x.ndim - 1,), (0,)), ((), ()))
-    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, force_mode, backend,
-                       x.dtype)
+    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, context, x.dtype)
 
 
-def _qmm_fwd(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
-    return _qmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend), (x, wmat)
+def _qmm_fwd(x, wmat, w_bits, m, context):
+    return _qmm_fwd_impl(x, wmat, w_bits, m, context), (x, wmat)
 
 
-def _qmm_bwd(w_bits, m, force_mode, backend, res, g):
+def _qmm_bwd(w_bits, m, context, res, g):
     x, wmat = res
     gf = g.astype(jnp.float32)
     dx = jnp.einsum("...n,kn->...k", gf, wmat.astype(jnp.float32))
@@ -235,35 +343,27 @@ def _qmm_bwd(w_bits, m, force_mode, backend, res, g):
     return dx.astype(x.dtype), dw.astype(wmat.dtype)
 
 
-quantized_matmul.defvjp(_qmm_fwd, _qmm_bwd)
+_qmm_core.defvjp(_qmm_fwd, _qmm_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def quantized_matmul_batched(x: Array, wmat: Array, w_bits: int,
-                             m: int = 8, force_mode: str = "auto",
-                             backend: str = "xla") -> Array:
-    """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``.
-
-    On ``backend="pallas"`` all experts run as ONE grouped fused-kernel
-    launch (expert axis = leading parallel grid dim) instead of an XLA
-    ``kmm_n`` recursion over batched dot_generals.
-    """
-    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _qbmm_core(x: Array, wmat: Array, w_bits: int, m: int,
+               context: ExecContext) -> Array:
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, context)
 
 
-def _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
+def _qbmm_fwd_impl(x, wmat, w_bits, m, context):
     qx, sx = _quantize(x, w_bits, axis=-1)            # per (expert, row)
     qw, sw = _quantize(wmat, w_bits, axis=1)          # per (expert, channel)
     dims = (((2,), (1,)), ((0,), (0,)))
-    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, force_mode, backend,
-                       x.dtype)
+    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, context, x.dtype)
 
 
-def _qbmm_fwd(x, wmat, w_bits, m, force_mode="auto", backend="xla"):
-    return _qbmm_fwd_impl(x, wmat, w_bits, m, force_mode, backend), (x, wmat)
+def _qbmm_fwd(x, wmat, w_bits, m, context):
+    return _qbmm_fwd_impl(x, wmat, w_bits, m, context), (x, wmat)
 
 
-def _qbmm_bwd(w_bits, m, force_mode, backend, res, g):
+def _qbmm_bwd(w_bits, m, context, res, g):
     x, wmat = res
     gf = g.astype(jnp.float32)
     dx = jnp.einsum("ecn,ekn->eck", gf, wmat.astype(jnp.float32))
@@ -271,42 +371,102 @@ def _qbmm_bwd(w_bits, m, force_mode, backend, res, g):
     return dx.astype(x.dtype), dw.astype(wmat.dtype)
 
 
-quantized_matmul_batched.defvjp(_qbmm_fwd, _qbmm_bwd)
+_qbmm_core.defvjp(_qbmm_fwd, _qbmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (context-first API + deprecation shims).
+# ---------------------------------------------------------------------------
+
+
+def _ctx(context, force_mode, backend, what) -> ExecContext:
+    return resolve_context(context, what=what, force_mode=force_mode,
+                           backend=backend)
+
+
+def quantized_matmul(x: Array, wmat: Array, w_bits: int, m: int = 8,
+                     force_mode: Optional[str] = None,
+                     backend: Optional[str] = None, *,
+                     context: Optional[ExecContext] = None) -> Array:
+    """(..., K) @ (K, N) quantized to ``w_bits``; returns x.dtype.
+
+    Pass ``context=`` (an :class:`~repro.core.context.ExecContext`) to pick
+    backend / mesh / tuning table / force_mode; the positional
+    ``force_mode``/``backend`` kwargs are deprecated shims.
+    """
+    ctx = _ctx(context, force_mode, backend, "quantized_matmul")
+    with ctx.activate():
+        return _qmm_core(x, wmat, w_bits, m, ctx)
+
+
+def quantized_matmul_batched(x: Array, wmat: Array, w_bits: int,
+                             m: int = 8, force_mode: Optional[str] = None,
+                             backend: Optional[str] = None, *,
+                             context: Optional[ExecContext] = None) -> Array:
+    """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``.
+
+    On the pallas backend all experts run as ONE grouped fused-kernel
+    launch (expert axis = leading parallel grid dim) instead of an XLA
+    ``kmm_n`` recursion over batched dot_generals; under ``context.mesh``
+    the expert axis shards over ``model`` (expert parallelism).
+    """
+    ctx = _ctx(context, force_mode, backend, "quantized_matmul_batched")
+    with ctx.activate():
+        return _qbmm_core(x, wmat, w_bits, m, ctx)
 
 
 def prequant_matmul(x: Array, wrec, w_bits: int, m: int = 8,
-                    force_mode: str = "auto", batched: bool = False,
-                    backend: str = "xla") -> Array:
+                    force_mode: Optional[str] = None, batched: bool = False,
+                    backend: Optional[str] = None, *,
+                    context: Optional[ExecContext] = None) -> Array:
     """Serving path on pre-quantized weights ({"q", "scale"} records): skips
     the runtime weight quantization (see quant/prequant.py).  Inference-only
-    (not differentiable).  ``backend="pallas"`` threads the stored
-    per-channel scale straight into the fused kernel's dequant epilogue."""
+    (not differentiable).  On the pallas backend the stored per-channel
+    scale threads straight into the fused kernel's dequant epilogue."""
+    ctx = _ctx(context, force_mode, backend, "prequant_matmul")
     qx, sx = _quantize(x, w_bits, axis=-1)
     qw = wrec["q"].astype(jnp.int32)
     dims = (((2,), (1,)), ((0,), (0,))) if batched \
         else (((x.ndim - 1,), (0,)), ((), ()))
-    return _quant_gemm(qx, qw, sx, wrec["scale"], w_bits, m, dims,
-                       force_mode, backend, x.dtype)
+    with ctx.activate():
+        return _quant_gemm(qx, qw, sx, wrec["scale"], w_bits, m, dims,
+                           ctx, x.dtype)
+
+
+def _model_context(quant) -> ExecContext:
+    """ExecContext for a model-internal GEMM, from the model's QuantConfig.
+
+    The mesh is resolved from the ambient context (the ``with mesh:`` the
+    serve engine / train loop trace under) — model code has no mesh kwarg to
+    thread.  Only the pallas backend consumes it (shard-mapped kernels);
+    XLA GEMMs partition via GSPMD as before.
+    """
+    backend = getattr(quant, "backend", "xla")
+    mesh = None
+    if backend == "pallas":
+        from repro.dist.sharding import _ambient_mesh
+        mesh = _ambient_mesh()
+    return ExecContext(backend=backend, mesh=mesh,
+                       force_mode=getattr(quant, "force_mode", "auto"))
 
 
 def maybe_quantized_matmul(x: Array, wmat: Array, quant, name: str) -> Array:
     """Dense matmul that routes through the quantized KMM path when enabled."""
     if isinstance(wmat, dict):
         return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
-                               quant.force_mode, backend=quant.backend)
+                               context=_model_context(quant))
     if quant is not None and quant.enabled:
         return quantized_matmul(x, wmat, quant.bits_for(name), quant.m,
-                                quant.force_mode, quant.backend)
+                                context=_model_context(quant))
     return jnp.einsum("...k,kn->...n", x, wmat.astype(x.dtype))
 
 
 def maybe_quantized_batched(x: Array, wmat: Array, quant, name: str) -> Array:
     if isinstance(wmat, dict):
         return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
-                               quant.force_mode, batched=True,
-                               backend=quant.backend)
+                               batched=True, context=_model_context(quant))
     if quant is not None and quant.enabled:
         return quantized_matmul_batched(x, wmat, quant.bits_for(name),
-                                        quant.m, quant.force_mode,
-                                        quant.backend)
+                                        quant.m,
+                                        context=_model_context(quant))
     return jnp.einsum("eck,ekn->ecn", x, wmat.astype(x.dtype))

@@ -29,17 +29,24 @@ Fixed shapes / no per-group retracing
 Pass ``mesh=`` to serve sharded: params take the ``repro.dist.sharding``
 param rules, the slot cache takes the cache rules (slots over ``data``,
 kv-heads over ``model``), and prefill/decode jits run under the mesh so
-GSPMD partitions them (DESIGN.md §4.3).
+GSPMD partitions them (DESIGN.md §4.3).  With the pallas quant backend the
+mesh is *negotiated* per GEMM: each quantized matmul that the mesh can tile
+runs the fused kernel shard-mapped (:mod:`repro.dist.shard_gemm`,
+bit-identical to unsharded); GEMMs the mesh cannot tile fall back to XLA
+with a logged reason — capability negotiation, not a hard error.
 
-Pass ``tuning_table=`` (a path or loaded :class:`repro.tune.TuningTable`)
-to install a kernel-variant/tile tuning table before the engine builds its
-jits — every quantized GEMM the model traces then resolves through the
-table-backed ``select_plan`` (DESIGN.md §10).  Numerics are pinned: a table
-changes speed, never tokens.
+Execution policy (backend / tuning table / force_mode) is configured with
+``context=`` (an :class:`repro.core.context.ExecContext`); the engine
+installs ``context.tuning_table`` before building its jits, so every
+quantized GEMM the model traces resolves through the table-backed
+``select_plan`` (DESIGN.md §10; numerics pinned — a table changes speed,
+never tokens).  The legacy ``quant_backend=`` / ``tuning_table=`` kwargs
+keep working behind a ``DeprecationWarning`` (DESIGN.md §12).
 """
 from __future__ import annotations
 
 import contextlib
+import logging
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -51,9 +58,12 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh
 
+from repro.core.context import ExecContext, resolve_context
 from repro.dist import sharding as dist_sharding
 from repro.models import lm
 from repro.models.config import ModelConfig
+
+log = logging.getLogger("repro.serve")
 
 Params = Any
 
@@ -146,35 +156,55 @@ class Engine:
                  mesh: Optional[Mesh] = None,
                  prompt_buckets: Optional[Sequence[int]] = None,
                  tuning_table: Optional[Any] = None,
-                 quant_backend: Optional[str] = None):
+                 quant_backend: Optional[str] = None,
+                 context: Optional[ExecContext] = None):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "continuous batching does not support encoder-decoder models")
-        if quant_backend is not None:
-            # Rewrite the model's quantized-GEMM backend before any jit
+        # Resolve the execution context.  Historical default: the model
+        # config's own quant policy.  ``mesh=`` stays a first-class kwarg
+        # (it also drives param/cache sharding, not just GEMMs) and is
+        # folded into the context below.
+        ctx = resolve_context(
+            context, what="Engine", backend=quant_backend,
+            tuning_table=tuning_table,
+            _defaults=ExecContext(
+                backend=getattr(cfg.quant, "backend", "xla"),
+                force_mode=getattr(cfg.quant, "force_mode", "auto")))
+        if mesh is not None:
+            if ctx.mesh is not None and ctx.mesh is not mesh:
+                raise ValueError("Engine: mesh= and context.mesh disagree; "
+                                 "set one of them")
+            ctx = ctx.replace(mesh=mesh)
+        mesh = ctx.mesh
+        if (ctx.backend != getattr(cfg.quant, "backend", "xla")
+                or ctx.force_mode != getattr(cfg.quant, "force_mode", "auto")):
+            # Rewrite the model's quantized-GEMM policy before any jit
             # traces: "pallas" serves through the fused single-pass kernel
             # (digit split + zero-point correction + dequant epilogue in one
             # pallas_call, DESIGN.md §11), "xla" through plain dot_generals.
             import dataclasses
-            cfg = cfg.with_quant(
-                dataclasses.replace(cfg.quant, backend=quant_backend))
-        if mesh is not None and getattr(cfg.quant, "backend", "xla") != "xla":
-            # Checked on the EFFECTIVE config (whether the backend came via
-            # quant_backend= or was already set on cfg.quant): pallas
-            # kernels are not GSPMD-partitionable.
-            raise ValueError(
-                "quant backend 'pallas' is single-device: GSPMD cannot "
-                "partition a pallas_call; drop mesh= or use 'xla'")
-        if tuning_table is not None:
+            cfg = cfg.with_quant(dataclasses.replace(
+                cfg.quant, backend=ctx.backend, force_mode=ctx.force_mode))
+        if mesh is not None and getattr(cfg.quant, "backend", "xla") == "pallas":
+            # Sharded pallas serving: each quantized GEMM the mesh can tile
+            # runs the fused kernel shard-mapped (bit-identical to the
+            # unsharded kernel); the rest fall back to XLA with a logged
+            # per-GEMM reason (repro.dist.shard_gemm capability negotiation).
+            log.info("serving with pallas quant backend under mesh %s: "
+                     "GEMMs run shard-mapped where the mesh tiles them, "
+                     "XLA otherwise (see repro.dist logs)", mesh)
+        if ctx.tuning_table is not None:
             # Installs the PROCESS-GLOBAL registry before any jit below
             # traces (jit caches keep the plans active at trace time).
-            # ``tuning_table=None`` leaves whatever table is currently
+            # A context without a table leaves whatever table is currently
             # active untouched — to serve untuned after a tuned engine in
             # the same process, call repro.tune.set_active_table(None)
             # first (tables are numerics-pinned, so this only ever changes
             # speed, never tokens).
             from repro.tune import set_active_table
-            set_active_table(tuning_table)
+            set_active_table(ctx.tuning_table)
+        self.context = ctx
         self.cfg = cfg
         self.mesh = mesh
         if mesh is not None:

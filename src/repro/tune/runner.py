@@ -112,7 +112,7 @@ def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                strict_tpu: bool = False,
                interpret: Optional[bool] = None,
                max_candidates: Optional[int] = None,
-               verbose: bool = False) -> TuneResult:
+               verbose: bool = False, context=None) -> TuneResult:
     """Sweep the pruned space for one (shape, w, backend) problem.
 
     Returns the fastest *correct* candidate plus the measured time of the
@@ -120,7 +120,17 @@ def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
     ``max_candidates`` truncates the prior-ordered space — when it bites,
     the truncation is recorded in the result's measurement count, never
     silent (the CLI logs it).
+
+    ``context`` (an :class:`repro.core.context.ExecContext`) supplies the
+    backend, and — when it carries a mesh with the pallas backend — rewrites
+    ``shape`` to the per-shard LOCAL shape before sweeping: the shard-mapped
+    kernel tiles its local block, so the local shape is both what the sweep
+    must measure and the key ``select_plan`` will look up at serve time.
     """
+    if context is not None:
+        backend = context.backend
+        if context.mesh is not None and backend == "pallas":
+            shape = context.local_gemm_shape(shape)
     a, b = make_operands(shape, w, seed=seed)
     cands = tune_space.pruned_space(shape, w, m=m, backend=backend,
                                     tile_choices=tile_choices,

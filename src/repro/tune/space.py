@@ -178,25 +178,38 @@ def validate(plan: ExecPlan, shape: Shape, *,
                 return f"TPU lane dim: block_n={plan.block_n} % 128 != 0"
             if plan.block_m % 32:
                 return f"TPU s8 sublane: block_m={plan.block_m} % 32 != 0"
-        n_acc = _N_ACCUM.get(plan.variant, 1)
-        if plan.variant == "fused":
-            # Raw-operand tiles (int8 carrier in the MM1 window, int16
-            # above it), 1 or 3 digit accumulators, plus the zero-point
-            # rowsum/colsum scratch and the dequant-epilogue scale tiles.
-            opd = 1 if plan.w <= plan.m else 2
-            n_acc = 1 if plan.w <= plan.m else 3
-            vmem = (opd * (plan.block_m * plan.block_k
-                           + plan.block_k * plan.block_n)
-                    + (n_acc + 1) * plan.block_m * plan.block_n * 4
-                    + 4 * 2 * (plan.block_m + plan.block_n))
-        else:
-            planes = 1 if plan.variant == "mm1" else 2
-            vmem = (planes * (plan.block_m * plan.block_k
-                              + plan.block_k * plan.block_n)    # s8 inputs
-                    + (n_acc + 1) * plan.block_m * plan.block_n * 4)  # acc+out
+        vmem = vmem_footprint(plan)
         if vmem > VMEM_BUDGET:
             return f"VMEM footprint {vmem} > {VMEM_BUDGET}"
     return None
+
+
+def vmem_footprint(plan: ExecPlan) -> int:
+    """Per-grid-step VMEM bytes of a pallas plan (0 for XLA plans).
+
+    The same accounting serves two gates: candidate pruning here, and the
+    per-shard capability negotiation in :mod:`repro.dist.shard_gemm` —
+    under a mesh each shard launches the kernel on its *local* block, so
+    the footprint of the (possibly table-chosen) tiles must fit one core's
+    VMEM regardless of how many shards the global GEMM spans.
+    """
+    if plan.backend != "pallas":
+        return 0
+    n_acc = _N_ACCUM.get(plan.variant, 1)
+    if plan.variant == "fused":
+        # Raw-operand tiles (int8 carrier in the MM1 window, int16
+        # above it), 1 or 3 digit accumulators, plus the zero-point
+        # rowsum/colsum scratch and the dequant-epilogue scale tiles.
+        opd = 1 if plan.w <= plan.m else 2
+        n_acc = 1 if plan.w <= plan.m else 3
+        return (opd * (plan.block_m * plan.block_k
+                       + plan.block_k * plan.block_n)
+                + (n_acc + 1) * plan.block_m * plan.block_n * 4
+                + 4 * 2 * (plan.block_m + plan.block_n))
+    planes = 1 if plan.variant == "mm1" else 2
+    return (planes * (plan.block_m * plan.block_k
+                      + plan.block_k * plan.block_n)        # s8 inputs
+            + (n_acc + 1) * plan.block_m * plan.block_n * 4)    # acc+out
 
 
 def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
@@ -341,3 +354,21 @@ def _round_pow2(x: int, lo: int = 8) -> int:
 def bucket_shape(shape: Shape) -> Shape:
     """Power-of-two M/N/K buckets used as table keys (min bucket 8)."""
     return tuple(_round_pow2(int(d)) for d in shape)  # type: ignore
+
+
+def local_shape(shape: Shape, mesh) -> Shape:
+    """Per-shard (M, K, N) of a GEMM under ``mesh``'s canonical sharded
+    layout (M over data axes, N over model, K replicated — see
+    :mod:`repro.dist.shard_gemm`).  Identity when the mesh can't tile the
+    GEMM (the XLA fallback runs on the global shape anyway).
+
+    This is the shape tables are keyed on (and bounds validated against)
+    under a mesh: the shard-mapped kernel tiles its local block, so local
+    M/N drive tile sanity and the VMEM footprint, and the local K drives
+    the ``max_exact_k`` / digit-accumulator headroom bounds.
+    """
+    from repro.dist.shard_gemm import negotiate, local_shape as _local
+    spec, _ = negotiate(shape, mesh)
+    if spec is None:
+        return shape
+    return _local(shape, spec, mesh)

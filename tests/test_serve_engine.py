@@ -329,10 +329,26 @@ def test_serve_quant_backend_pallas_token_identical(tiny):
     assert run("xla", "w12") == run("pallas", "w12")
 
 
-def test_engine_rejects_pallas_backend_under_mesh(tiny):
+def test_engine_pallas_under_mesh_negotiates(tiny):
+    """The old hard mesh-rejection is gone: pallas + mesh serves through
+    capability negotiation.  On a 1x1 mesh no axis can tile any GEMM, so
+    every quantized matmul downgrades to XLA (logged) — and the tokens must
+    match the same engine without a mesh."""
+    from repro.core.context import ExecContext
+
     cfg, params = tiny
+    qcfg = cfg.with_quant(get_config("llama3.2-1b", smoke=True,
+                                     quant="w8").quant)
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                              ("data", "model"))
-    with pytest.raises(ValueError, match="single-device"):
-        Engine(cfg, params, max_seq=16, batch_size=1, mesh=mesh,
-               quant_backend="pallas")
+    spec = [(5, 3, 0.0, ()), (9, 2, 0.8, ())]
+
+    def run(mesh_arg):
+        eng = Engine(qcfg, params, max_seq=32, batch_size=2, rng_seed=5,
+                     context=ExecContext(backend="pallas", mesh=mesh_arg))
+        assert eng.context.backend == "pallas"
+        reqs = _mk_requests(qcfg, spec)
+        eng.generate(reqs)
+        return [r.generated for r in reqs]
+
+    assert run(mesh) == run(None)
