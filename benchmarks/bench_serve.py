@@ -1,11 +1,13 @@
 """Serving benchmark: continuous batching under a Poisson arrival trace.
 
-Measures decode throughput (generated tokens/s) and time-to-first-token
-(mean / p95, including queueing delay) at several slot counts, on the smoke
-config of a dense arch through the quantized KMM path.  Also records the
-engine's compiled-trace counts: the fixed-shape prefill buckets and the
-single decode trace are what kill per-group retracing, so the check fails
-if the decode jit ever retraces.
+Measures decode throughput (generated tokens/s over engine-busy time) and
+time-to-first-token (mean / p95, including queueing delay) on a 1 / 2 / 4 /
+8 / 64 slot ladder, on the smoke config of a dense arch through the
+quantized KMM path.  Each row also reports mean live-slot occupancy: the
+64-slot row serves the same 16-request trace as the 8-slot row, so bucketed
+decode must keep its per-step cost flat (idle slots are free) — the
+slot-scaling-cliff checks fail otherwise.  ``Engine.warm()`` pre-traces
+every decode-bucket and prefill width, so the retrace check stays exact.
 
     PYTHONPATH=src python -m benchmarks.bench_serve
 """
@@ -17,8 +19,8 @@ import numpy as np
 
 ARCH = "llama3.2-1b"
 QUANT = "w8"
-BATCH_SIZES = (1, 2, 4)
-N_REQUESTS = 8
+BATCH_SIZES = (1, 2, 4, 8, 64)
+N_REQUESTS = 16
 MAX_NEW = 8
 MAX_SEQ = 64
 # fast enough that requests queue behind busy slots (the smoke model
@@ -51,9 +53,10 @@ def run(batch_sizes=BATCH_SIZES) -> List[Dict]:
         reqs = _requests(cfg, rng)
         arrivals = np.cumsum(
             rng.exponential(1.0 / ARRIVAL_RATE, size=len(reqs)))
-        # warm the jits so the measured run sees steady-state traces
-        warm = _requests(cfg, np.random.default_rng(1))
-        engine.generate(warm)
+        # pre-trace every decode-bucket / prefill width, then run one warm
+        # workload so the measured run sees steady-state everything
+        engine.warm()
+        engine.generate(_requests(cfg, np.random.default_rng(1)))
         traces_before = dict(engine.n_traces())
         stats = engine.generate(reqs, arrival_s=arrivals.tolist())
         traces_after = dict(engine.n_traces())
@@ -68,6 +71,7 @@ def run(batch_sizes=BATCH_SIZES) -> List[Dict]:
             "slots": bs,
             "tokens": stats.generated_tokens,
             "tokens_per_s": round(stats.tokens_per_s, 2),
+            "occupancy_pct": round(stats.occupancy_pct, 1),
             "ttft_mean_ms": round(float(ttft.mean()) * 1e3, 1),
             "ttft_p95_ms": round(float(np.percentile(ttft, 95)) * 1e3, 1),
             "decode_steps": stats.decode_steps,
@@ -108,6 +112,30 @@ def checks(rows: List[Dict]):
                     < narrow[0]["offline_decode_steps"],
                     f"steps {narrow[0]['offline_decode_steps']} -> "
                     f"{wide[0]['offline_decode_steps']}"))
+    by_slots = {r["slots"]: r for r in rows}
+    if {2, 4, 8} <= by_slots.keys():
+        # the slot-scaling cliff: before bucketed decode, adding slots past
+        # the live-request count *cost* throughput (every step ran the full
+        # batch width).  Now 4- and 8-slot engines must keep up with the
+        # 2-slot engine on the same trace (0.85 tolerance: wall-clock noise
+        # on a shared CI box).
+        t2 = by_slots[2]["tokens_per_s"]
+        ok = all(by_slots[s]["tokens_per_s"] >= 0.85 * t2 for s in (4, 8))
+        out.append(("no slot-scaling cliff: tokens/s at 4 and 8 slots "
+                    "keeps up with 2 slots",
+                    ok,
+                    ";".join(f"slots{s}={by_slots[s]['tokens_per_s']}tok/s"
+                             for s in (2, 4, 8))))
+    if {8, 64} <= by_slots.keys():
+        # idle slots are free: the 64-slot engine serves the identical
+        # 16-request trace, so bucketed decode must keep its per-step cost
+        # within noise of the 8-slot engine (dense decode would run a
+        # 64-wide batch every step)
+        u8, u64 = by_slots[8]["us_per_call"], by_slots[64]["us_per_call"]
+        out.append(("idle slots are free: 64-slot decode step cost within "
+                    "1.5x of 8-slot on the same trace",
+                    u64 <= 1.5 * u8,
+                    f"us_per_call {u8:.0f} -> {u64:.0f}"))
     return out
 
 

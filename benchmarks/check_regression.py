@@ -83,6 +83,14 @@ def compare(base: Dict[str, float], new: Dict[str, float], tol: float,
     for name in missing:
         print(f"{name:44s} DROPPED from new run")
         n_fail += 1
+    # rows only in the new run (e.g. a widened serve slot ladder) are
+    # surfaced, not silently skipped: they become gated once the committed
+    # baseline picks them up, and until then the comparison stays strictly
+    # like-for-like
+    added = sorted(n for n in new if n not in base
+                   and (not match or any(tok in n for tok in match)))
+    for name in added:
+        print(f"{name:44s} NEW (no baseline)  new {norm(new, name):12.4g}")
     return n_fail
 
 

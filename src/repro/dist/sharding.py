@@ -201,6 +201,41 @@ def cache_sharding(cache_shapes: Params, mesh: Mesh, *,
     return jax.tree_util.tree_map_with_path(leaf_sharding, cache_shapes)
 
 
+def page_pool_sharding(pool_shapes: Params, mesh: Mesh) -> Params:
+    """NamedSharding pytree for a paged serve-cache pool (serve/cache.py).
+
+    Pool leaves are laid out ``(n_periods, page_or_state_row, ...)``: axis 1
+    is the page (attn K/V pools) or state-row (recurrent pools) dimension,
+    sharded over the mesh's data axes when divisible — the pool analogue of
+    the slot dim in :func:`cache_sharding`.  The per-leaf model axes are
+    unchanged from ``CACHE_MODEL_AXES``: swapping the slot dim for a
+    page/state-row dim (and, for K/V, splitting Smax into (page_row, page))
+    keeps the kv-head / rwkv-head / mamba-inner payload dims at the same
+    indices, so the same table applies.
+    """
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh_axis_size(mesh, a)
+    bentry = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    msize = mesh_axis_size(mesh, "model")
+
+    def leaf_sharding(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if len(shape) >= 2 and bentry is not None and dsize > 1 \
+                and shape[1] % dsize == 0:
+            spec[1] = bentry
+        name = _path_names(path)[-1]
+        m_axis = CACHE_MODEL_AXES.get(name)
+        if m_axis is not None and m_axis < len(shape) and msize > 1 \
+                and shape[m_axis] % msize == 0:
+            spec[m_axis] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, pool_shapes)
+
+
 def _ambient_mesh() -> Optional[Mesh]:
     mesh = pxla.thread_resources.env.physical_mesh
     if mesh is None or mesh.empty:

@@ -20,10 +20,20 @@ def main() -> int:
     ap.add_argument("--quant", default="w12",
                     choices=["none", "w8", "w12", "mixed"])
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4,
-                    help="decode slots (continuous batching)")
+    ap.add_argument("--batch", "--slots", dest="batch", type=int, default=4,
+                    help="decode slots (continuous batching); decode runs "
+                         "on the smallest power-of-two bucket covering the "
+                         "live slots, so idle slots cost nothing")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: advance prompts this many tokens "
+                         "per engine step, interleaved with decode "
+                         "(power of two >= 8; 0: whole-prompt prefill at "
+                         "admission)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share repeated prompt prefixes via paged-cache "
+                         "snapshots (implies chunked prefill)")
     ap.add_argument("--eos", type=int, default=-1,
                     help="stop token id (-1: none)")
     ap.add_argument("--poisson", type=float, default=0.0,
@@ -56,7 +66,9 @@ def main() -> int:
     cfg = get_config(args.arch, smoke=not args.full_size, quant=args.quant)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = Engine(cfg, params, max_seq=args.max_seq, batch_size=args.batch,
-                    context=ctx)
+                    context=ctx,
+                    prefill_chunk=args.prefill_chunk or None,
+                    prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     stop = (args.eos,) if args.eos >= 0 else ()
     reqs = [Request(prompt=list(rng.integers(1, cfg.vocab_size,
@@ -77,8 +89,11 @@ def main() -> int:
               f"latency {rs.latency_s*1e3:.0f}ms)")
     print(f"prefill {stats.prefill_s:.2f}s; {stats.generated_tokens} tokens "
           f"in {stats.decode_steps} decode steps / {stats.decode_s:.2f}s "
-          f"({stats.tokens_per_s:.1f} tok/s, quant={args.quant}); "
+          f"({stats.tokens_per_s:.1f} tok/s, occupancy "
+          f"{stats.occupancy_pct:.0f}%, quant={args.quant}); "
           f"traces={engine.n_traces()}")
+    if engine.prefix is not None:
+        print(f"prefix cache: {engine.prefix.stats()}")
     return 0
 
 

@@ -403,6 +403,13 @@ def decode_step(params: Params, cfg: ModelConfig, token: Array, cache: Params,
 
 PREFILL_CHUNK = 2048
 
+# Fixed associative-scan grid for the ragged/serve prefill path.  The mamba
+# recurrence is bracketing-sensitive in fp32: resume-from-offset prefill is
+# bit-exact vs single-shot only when both decompose the sequence over the
+# same absolute-position grid.  All serve chunk/bucket widths are multiples
+# of 8, so an 8-wide grid is boundary-independent.
+SSM_PREFILL_GRID = 8
+
 
 def _attn_max_seq(cfg: ModelConfig, cache: Params) -> Optional[int]:
     """Smax of the attention KV cache, or None for attention-free models."""
@@ -418,7 +425,8 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
             chunk_size: int = PREFILL_CHUNK,
             positions: Optional[Array] = None,
             pad_mask: Optional[Array] = None,
-            last_idx: Optional[Array] = None):
+            last_idx: Optional[Array] = None,
+            start: Optional[Array] = None):
     """Chunked prefill: the prompt runs through the model ``chunk_size``
     tokens at a time (vLLM/Sarathi-style), so peak activation memory is
     O(chunk * d) regardless of prompt length; attention/recurrent state
@@ -441,11 +449,22 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
     Ragged calls run as a single chunk (prompts are bucketed by the serving
     engine, so S is already bounded); the plain path keeps the chunked scan.
 
+    ``start`` (scalar int32, ragged path only) is the resume offset: the
+    tokens are treated as positions ``start .. start+S-1`` of the sequence —
+    KV lands at cache index ``start+j``, default RoPE positions are
+    ``start+j``, and the carried recurrent state in ``cache`` is assumed to
+    sit at position ``start``.  Cache contents below ``start`` are treated
+    as valid earlier-chunk keys.  Chunked prefill (several resumed calls)
+    is bit-exact vs one single-shot call per block type: attention always
+    scores against the full Smax cache with identical masking, the rwkv
+    recurrence is sequential, and the mamba scan runs on the fixed
+    ``SSM_PREFILL_GRID`` so the bracketing is boundary-independent.
+
     Returns (last-real-position logits (B, V), cache, mem) where mem is the
     cross-attention memory for enc-dec models (None otherwise).
     """
     ragged = (positions is not None or pad_mask is not None
-              or last_idx is not None)
+              or last_idx is not None or start is not None)
     if ragged and cfg.frontend == "vision" and frontend_embeds is not None:
         raise NotImplementedError(
             "ragged prefill does not support vision prefix tokens")
@@ -463,12 +482,26 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
         mem = _encdec_memory(params, cfg, ex)
 
     b, s, _ = x.shape
+    off = jnp.int32(0) if start is None else jnp.asarray(start, jnp.int32)
     kv_valid = None
     if pad_mask is not None:
         smax = _attn_max_seq(cfg, cache)
         if smax is not None:
-            kv_valid = jnp.concatenate(
-                [pad_mask, jnp.ones((b, smax - s), bool)], axis=1)
+            # Absolute-position validity over the whole cache: positions
+            # below the resume offset hold real earlier-chunk keys, the
+            # current chunk maps through pad_mask, and future positions stay
+            # True (the causal mask already hides them).
+            kvpos = jnp.arange(smax, dtype=jnp.int32)[None, :]
+            rel = jnp.clip(kvpos - off, 0, s - 1)
+            in_chunk = (kvpos >= off) & (kvpos < off + s)
+            chunk_valid = jnp.take_along_axis(
+                pad_mask, jnp.broadcast_to(rel, (b, smax)), axis=1)
+            kv_valid = jnp.where(in_chunk, chunk_valid, True)
+
+    # Ragged/serve calls run the mamba scan on the fixed grid so chunked
+    # prefill brackets identically to single-shot; the plain (train-shaped)
+    # path keeps the default wide chunk.
+    ssm_chunk = SSM_PREFILL_GRID if ragged else S.MAMBA_SCAN_CHUNK
 
     def run_chunk(chunk_cache, xc, offset, pos_c, mask_c, li):
         """One chunk through all periods; pos_c/mask_c/li are the ragged
@@ -490,7 +523,7 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
                 elif spec.kind == "mamba":
                     y, nc = S.mamba_apply_stateful(
                         p["mamba"], h, period_cache[f"pos{pos}"], cfg, quant,
-                        name, mask=mask_c, last_idx=li)
+                        name, chunk=ssm_chunk, mask=mask_c, last_idx=li)
                 else:
                     y, nc = R.rwkv_apply_stateful(
                         p["rwkv"], h, period_cache[f"pos{pos}"], cfg, quant,
@@ -519,8 +552,7 @@ def prefill(params: Params, cfg: ModelConfig, tokens: Array, cache: Params,
     if ragged:
         li = (last_idx.astype(jnp.int32) if last_idx is not None
               else jnp.full((b,), s - 1, jnp.int32))
-        cache, xall = run_chunk(cache, x, jnp.int32(0), positions,
-                                pad_mask, li)
+        cache, xall = run_chunk(cache, x, off, positions, pad_mask, li)
         last_h = jnp.take_along_axis(xall, li[:, None, None], axis=1)
         logits = _logits(params, cfg, last_h)
         return logits[:, 0, :], cache, mem

@@ -21,6 +21,12 @@ Array = jax.Array
 Params = Dict[str, Array]
 
 
+# Default associative-scan chunk for the full-sequence (train) path.  Serve
+# prefill passes its own fixed grid (lm.SSM_PREFILL_GRID) so that chunked
+# prefill brackets the fp32 recurrence identically to single-shot.
+MAMBA_SCAN_CHUNK = 128
+
+
 def _dt_rank(d_model: int) -> int:
     return max(1, -(-d_model // 16))
 
@@ -52,12 +58,15 @@ def mamba_init(key, cfg, dtype) -> Params:
 def _ssm_inputs(p: Params, x: Array, cfg, quant, name: str,
                 conv_tail: Optional[Array] = None,
                 mask: Optional[Array] = None):
-    """Projections + causal depthwise conv; returns (x_conv, z, delta, B, C).
+    """Projections + causal depthwise conv; returns
+    (x_conv, z, delta, B, C, x_in).
 
     ``conv_tail``: the previous chunk's last conv_width-1 pre-conv inputs
     (zeros at sequence start).  ``mask`` (B, S): pad positions get zeroed
     pre-conv inputs, so conv windows spanning a ragged-prompt boundary see
-    exactly the zeros an unpadded run would."""
+    exactly the zeros an unpadded run would.  ``x_in`` (the masked pre-conv
+    projection) is returned so the caller can carry the conv tail across
+    chunk boundaries without re-projecting."""
     di = cfg.expand * cfg.d_model
     ds = cfg.d_state
     dtr = _dt_rank(cfg.d_model)
@@ -75,7 +84,8 @@ def _ssm_inputs(p: Params, x: Array, cfg, quant, name: str,
     dt_r, b_mat, c_mat = jnp.split(x_dbl, [dtr, dtr + ds], axis=-1)
     delta = maybe_quantized_matmul(dt_r, p["dt_proj"], quant, f"{name}.dt_proj")
     delta = jax.nn.softplus(delta.astype(jnp.float32) + p["dt_bias"])
-    return x_conv, z, delta, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+    return (x_conv, z, delta, b_mat.astype(jnp.float32),
+            c_mat.astype(jnp.float32), x_in)
 
 
 def _causal_conv(x_padded: Array, w: Array, b: Array) -> Array:
@@ -100,13 +110,19 @@ def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
     (h_t = h_{t-1}) and zeroes their conv inputs, and ``last_idx`` (B,)
     makes the carried conv tail end at each row's last *real* token instead
     of the last padded position — so the returned state matches a per-row
-    unpadded run exactly."""
+    unpadded run exactly.
+
+    The carried conv tail is sliced from the concatenation of the incoming
+    tail and this chunk's (masked) pre-conv inputs, so a tail window that
+    reaches past the chunk start picks up the *previous* chunk's inputs —
+    resume-from-offset prefill (chunk boundaries anywhere, including a
+    final chunk shorter than conv_width-1) stays exact."""
     b, s, _ = x.shape
     di, ds = cfg.expand * cfg.d_model, cfg.d_state
     cw = cfg.conv_width
     if cache is None:
         cache = mamba_cache_init(cfg, b, x.dtype)
-    x_conv, z, delta, b_mat, c_mat = _ssm_inputs(
+    x_conv, z, delta, b_mat, c_mat, x_in = _ssm_inputs(
         p, x, cfg, quant, name, conv_tail=cache["conv"], mask=mask)
     a = -jnp.exp(p["a_log"])                                 # (di, ds)
     x_f = x_conv.astype(jnp.float32)
@@ -142,26 +158,20 @@ def mamba_apply_stateful(p: Params, x: Array, cache: Optional[Params], cfg,
     y = y + x_f * p["d_skip"][None, None, :]
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     out = maybe_quantized_matmul(y, p["out_proj"], quant, f"{name}.out_proj")
-    # conv tail for the next chunk: last cw-1 pre-conv inputs
+    # Conv tail for the next chunk: the last cw-1 pre-conv inputs ending at
+    # each row's last real token.  Slicing the concat of the incoming tail
+    # and this chunk's x_in means windows reaching below the chunk start
+    # fall through to the previous chunk's inputs (zeros at sequence start),
+    # exactly as an unchunked run would see them.
+    full = jnp.concatenate([cache["conv"].astype(x_in.dtype), x_in], axis=1)
     if last_idx is None:
-        xw = x[:, -(cw - 1):, :]
+        tail = full[:, s:, :]
     else:
-        # per-row window [last_idx-cw+2, last_idx], zero-padded below 0 and
-        # with pad rows zeroed, matching the unpadded run's tail exactly
-        xm = x if mask is None else jnp.where(mask[:, :, None], x, 0)
-        xp = jnp.concatenate(
-            [jnp.zeros((b, cw - 1, x.shape[-1]), x.dtype), xm], axis=1)
-        xw = jax.vmap(
+        # window ends at x_in[last_idx] == full[cw-1+last_idx]
+        tail = jax.vmap(
             lambda xr, st: lax.dynamic_slice_in_dim(xr, st, cw - 1, axis=0)
-        )(xp, last_idx.astype(jnp.int32) + 1)
-    xz = maybe_quantized_matmul(xw, p["in_proj"], quant, f"{name}.in_proj")
-    tail = jnp.split(xz, 2, axis=-1)[0].astype(cache["conv"].dtype)
-    if last_idx is not None and mask is not None:
-        # rows gathered from the zero-pad region must stay exactly zero
-        rowpos = (last_idx[:, None].astype(jnp.int32)
-                  - jnp.arange(cw - 2, -1, -1, dtype=jnp.int32)[None, :])
-        tail = jnp.where(rowpos[:, :, None] >= 0, tail, 0)
-    return out, {"conv": tail, "ssm": hT}
+        )(full, last_idx.astype(jnp.int32) + 1)
+    return out, {"conv": tail.astype(cache["conv"].dtype), "ssm": hT}
 
 
 def mamba_apply(p: Params, x: Array, cfg, quant, name: str,

@@ -1,1 +1,7 @@
+from repro.serve.cache import PagedCachePool, PrefixCache
 from repro.serve.engine import Engine, Request, ServeStats
+from repro.serve.scheduler import Scheduler, decode_widths_for, \
+    prompt_buckets_for
+
+__all__ = ["Engine", "Request", "ServeStats", "Scheduler", "PagedCachePool",
+           "PrefixCache", "decode_widths_for", "prompt_buckets_for"]

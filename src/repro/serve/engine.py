@@ -1,163 +1,86 @@
-"""Continuous-batching serve engine: slot scheduler + prefill/decode jits.
+"""Continuous-batching serve engine: orchestrator over scheduler / cache /
+executor layers.
 
-The engine owns ``batch_size`` decode *slots* backed by one fixed-shape KV /
-recurrent cache.  Requests are admitted into freed slots as soon as they
-open — there is no group barrier, so a 1-token request next to a 64-token
-request costs one step, not sixty-four.  All matmuls ride the model's
-quantized KMM policy — this is the paper's deployment scenario (integer
-inference accelerator).
+The engine used to be a monolith owning scheduling state, the dense slot
+cache and every jit.  It is now wiring between three seams:
 
-Correctness on ragged prompts
-  Prompts are right-padded to a small set of fixed bucket lengths and
-  prefilled one request at a time with ``pad_mask``/``last_idx`` threaded
-  into :func:`repro.models.lm.prefill`, so RoPE positions, attention masks
-  and recurrent (mamba/rwkv) states are exact per request.  The prefilled
-  batch-1 cache is inserted into the request's slot; decode then runs the
-  whole slot batch with a per-slot position vector
-  (:func:`repro.models.lm.decode_step` with ``t: (B,)``).  Pad keys written
-  past a prompt's end are never attended: the causal mask excludes indices
-  above the slot's position and decode overwrites each index before it
-  becomes visible.
+  * :mod:`repro.serve.scheduler` — admission + step policy.  Decode runs on
+    the smallest power-of-two *bucketed* live-slot batch (one trace per
+    bucket width), so a 64-slot engine with 3 live requests pays for a
+    4-wide decode, not 64 — the slot-scaling cliff fix.  Long prompts
+    prefill in fixed-size chunks interleaved between decode steps
+    (``prefill_chunk=``), so TTFT of concurrent requests stops being
+    hostage to the longest prompt.
+  * :mod:`repro.serve.cache` — paged KV / recurrent-state pool (fixed-size
+    pages, slot→page table as a jit-visible int32 array) with optional
+    prompt-prefix sharing (``prefix_cache=True``): repeated prompt prefixes
+    restore a page/state snapshot instead of recomputing, bit-exact vs a
+    cold prefill.
+  * :mod:`repro.serve.executor` — the compiled gather/compute/scatter entry
+    points over the pool, riding the existing ``ExecContext`` execution
+    path (quantized KMM policy, optional mesh, tuning tables).
 
-Fixed shapes / no per-group retracing
-  One decode trace per engine (shapes ``(B,)``), one prefill trace per
-  prompt bucket (power-of-two lengths), one insert trace, two sampler
-  traces.  Admission order and per-(request, step) sampling keys make
-  output token-identical to sequential single-request generation, for
-  greedy and temperature sampling alike.
+Correctness on ragged prompts is unchanged from the dense-cache engine:
+prompts are right-padded to bucket widths with ``pad_mask``/``last_idx``
+threaded into :func:`repro.models.lm.prefill` (now with a resume offset
+``start=`` for chunking), and decode runs a per-slot position vector.
+Admission order and per-(request, step) sampling keys make output
+token-identical to sequential single-request generation — independent of
+slot count, decode-bucket width, prefill chunking and prefix-cache hits.
 
 Pass ``mesh=`` to serve sharded: params take the ``repro.dist.sharding``
-param rules, the slot cache takes the cache rules (slots over ``data``,
-kv-heads over ``model``), and prefill/decode jits run under the mesh so
-GSPMD partitions them (DESIGN.md §4.3).  With the pallas quant backend the
-mesh is *negotiated* per GEMM: each quantized matmul that the mesh can tile
-runs the fused kernel shard-mapped (:mod:`repro.dist.shard_gemm`,
-bit-identical to unsharded); GEMMs the mesh cannot tile fall back to XLA
-with a logged reason — capability negotiation, not a hard error.
+param rules, the page pools take the page-pool rules (pages over ``data``,
+kv-heads over ``model``), and the executor's jits run under the mesh so
+GSPMD partitions them (DESIGN.md §4.3, §13).  With the pallas quant
+backend the mesh is *negotiated* per GEMM (:mod:`repro.dist.shard_gemm`).
 
 Execution policy (backend / tuning table / force_mode) is configured with
-``context=`` (an :class:`repro.core.context.ExecContext`); the engine
-installs ``context.tuning_table`` before building its jits, so every
-quantized GEMM the model traces resolves through the table-backed
-``select_plan`` (DESIGN.md §10; numerics pinned — a table changes speed,
-never tokens).  The legacy ``quant_backend=`` / ``tuning_table=`` kwargs
-keep working behind a ``DeprecationWarning`` (DESIGN.md §12).
+``context=`` (an :class:`repro.core.context.ExecContext`); the legacy
+``quant_backend=`` / ``tuning_table=`` kwargs keep working behind a
+``DeprecationWarning`` (DESIGN.md §12).
 """
 from __future__ import annotations
 
 import contextlib
 import logging
+import math
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import Mesh
 
 from repro.core.context import ExecContext, resolve_context
 from repro.dist import sharding as dist_sharding
-from repro.models import lm
-from repro.models.config import ModelConfig
+from repro.serve.cache import PagedCachePool, PrefixCache, default_page_size
+from repro.serve.executor import Executor
+from repro.serve.scheduler import (MIN_BUCKET, Request, RequestStats,
+                                   Scheduler, ServeStats, SlotState,
+                                   prompt_buckets_for)
+
+__all__ = ["Engine", "Request", "RequestStats", "ServeStats", "SlotState",
+           "prompt_buckets_for", "MIN_BUCKET"]
 
 log = logging.getLogger("repro.serve")
 
 Params = Any
 
-MIN_BUCKET = 8
-
-
-def prompt_buckets_for(max_seq: int,
-                       min_bucket: int = MIN_BUCKET) -> Tuple[int, ...]:
-    """Default prompt-bucket ladder: powers of two up to ``max_seq``.
-
-    Shared with ``python -m repro.tune --shapes serve`` so the tuner sweeps
-    exactly the prefill shapes the engine will execute.
-    """
-    buckets = []
-    b = min_bucket
-    while b < max_seq:
-        buckets.append(b)
-        b *= 2
-    buckets.append(max_seq)
-    return tuple(sorted(set(buckets)))
-
-
-@dataclass
-class Request:
-    prompt: List[int]
-    max_new_tokens: int = 16
-    temperature: float = 0.0
-    stop_tokens: Tuple[int, ...] = ()
-    generated: List[int] = field(default_factory=list)
-    stats: Optional["RequestStats"] = None
-
-
-@dataclass
-class RequestStats:
-    rid: int
-    prompt_len: int
-    arrival_s: float
-    first_token_s: float = 0.0
-    finish_s: float = 0.0
-    n_tokens: int = 0
-    stop_reason: str = ""
-
-    @property
-    def ttft_s(self) -> float:
-        return self.first_token_s - self.arrival_s
-
-    @property
-    def latency_s(self) -> float:
-        return self.finish_s - self.arrival_s
-
-
-@dataclass
-class ServeStats:
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    decode_steps: int = 0          # batched engine steps
-    generated_tokens: int = 0      # actual tokens produced across requests
-    requests: List[RequestStats] = field(default_factory=list)
-
-    @property
-    def tokens_per_s(self) -> float:
-        """Serving throughput: *generated tokens* (counting every request in
-        flight — not engine steps) over total model time.  First tokens are
-        produced by prefill, so the denominator includes prefill_s; a
-        max_new_tokens=1 workload therefore still reports real throughput."""
-        busy = self.prefill_s + self.decode_s
-        return self.generated_tokens / busy if busy else 0.0
-
-
-class _Slot:
-    __slots__ = ("req", "pos", "last_tok", "rid", "n_tokens")
-
-    def __init__(self):
-        self.req: Optional[Request] = None
-        self.pos = 0          # next cache write index
-        self.last_tok = 0
-        self.rid = 0
-        self.n_tokens = 0     # tokens generated so far (sampling-key index)
-
-    @property
-    def active(self) -> bool:
-        return self.req is not None
-
 
 class Engine:
     """Continuous-batching engine over ``batch_size`` decode slots."""
 
-    def __init__(self, cfg: ModelConfig, params: Params, max_seq: int = 512,
+    def __init__(self, cfg, params: Params, max_seq: int = 512,
                  batch_size: int = 4, rng_seed: int = 0,
                  mesh: Optional[Mesh] = None,
                  prompt_buckets: Optional[Sequence[int]] = None,
                  tuning_table: Optional[Any] = None,
                  quant_backend: Optional[str] = None,
-                 context: Optional[ExecContext] = None):
+                 context: Optional[ExecContext] = None,
+                 page_size: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_snapshots: int = 4):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "continuous batching does not support encoder-decoder models")
@@ -181,27 +104,19 @@ class Engine:
                 or ctx.force_mode != getattr(cfg.quant, "force_mode", "auto")):
             # Rewrite the model's quantized-GEMM policy before any jit
             # traces: "pallas" serves through the fused single-pass kernel
-            # (digit split + zero-point correction + dequant epilogue in one
-            # pallas_call, DESIGN.md §11), "xla" through plain dot_generals.
+            # (DESIGN.md §11), "xla" through plain dot_generals.
             import dataclasses
             cfg = cfg.with_quant(dataclasses.replace(
                 cfg.quant, backend=ctx.backend, force_mode=ctx.force_mode))
         if mesh is not None and getattr(cfg.quant, "backend", "xla") == "pallas":
-            # Sharded pallas serving: each quantized GEMM the mesh can tile
-            # runs the fused kernel shard-mapped (bit-identical to the
-            # unsharded kernel); the rest fall back to XLA with a logged
-            # per-GEMM reason (repro.dist.shard_gemm capability negotiation).
             log.info("serving with pallas quant backend under mesh %s: "
                      "GEMMs run shard-mapped where the mesh tiles them, "
                      "XLA otherwise (see repro.dist logs)", mesh)
         if ctx.tuning_table is not None:
             # Installs the PROCESS-GLOBAL registry before any jit below
             # traces (jit caches keep the plans active at trace time).
-            # A context without a table leaves whatever table is currently
-            # active untouched — to serve untuned after a tuned engine in
-            # the same process, call repro.tune.set_active_table(None)
-            # first (tables are numerics-pinned, so this only ever changes
-            # speed, never tokens).
+            # Tables are numerics-pinned: a table changes speed, never
+            # tokens (DESIGN.md §10).
             from repro.tune import set_active_table
             set_active_table(ctx.tuning_table)
         self.context = ctx
@@ -218,51 +133,41 @@ class Engine:
             prompt_buckets = prompt_buckets_for(max_seq)
         self.prompt_buckets = tuple(sorted(set(prompt_buckets)))
 
-        self._slots = [_Slot() for _ in range(batch_size)]
-        self._pending: deque = deque()       # (req, arrival_s)
+        # -- chunked prefill / paging knobs ---------------------------------
+        if page_size is None:
+            page_size = default_page_size(max_seq)
+        if max_seq % page_size:
+            raise ValueError(f"page_size={page_size} must divide "
+                             f"max_seq={max_seq}")
+        if prefix_cache and prefill_chunk is None:
+            # prefix restore resumes prefill mid-prompt, which needs the
+            # chunked entry; pick a chunk covering at least one page
+            prefill_chunk = max(page_size, MIN_BUCKET)
+        if prefill_chunk is not None:
+            if prefill_chunk < MIN_BUCKET or \
+                    prefill_chunk & (prefill_chunk - 1):
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} must be a power of two "
+                    f">= {MIN_BUCKET} (the serve mamba-scan grid)")
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self._chunk_buckets = (prompt_buckets_for(prefill_chunk)
+                               if prefill_chunk is not None else None)
+
+        self.scheduler = Scheduler(batch_size, max_seq)
+        self.pool = PagedCachePool(
+            cfg, batch_size, max_seq, page_size,
+            snapshot_slots=prefix_snapshots if prefix_cache else 0,
+            mesh=mesh)
+        self.executor = Executor(cfg, self.params, self.pool, mesh=mesh)
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            align = math.lcm(page_size, prefill_chunk, MIN_BUCKET)
+            self.prefix = PrefixCache(self.pool, align)
+
         self._next_rid = 0
         self._clock0 = time.monotonic()
         self._stats = ServeStats()
-
-        with self._mesh_ctx():
-            self._cache = self._make_cache(batch_size)
-            # reusable zero-initialized batch-1 cache fed to every prefill
-            # (never donated, so it stays zero)
-            self._cache1 = lm.init_cache(cfg, 1, max_seq)
-
-        # Under a mesh, pin the cache output sharding to the canonical
-        # cache rules: otherwise GSPMD may pick a different layout for the
-        # decode/insert result than the input had, and the next call
-        # retraces (and silently resharded every step).
-        decode_out_sh = insert_out_sh = None
-        if mesh is not None:
-            cache_sh = dist_sharding.cache_sharding(
-                jax.eval_shape(lambda: lm.init_cache(cfg, batch_size,
-                                                     max_seq)),
-                mesh, batch=batch_size)
-            from jax.sharding import NamedSharding
-            logits_sh = NamedSharding(mesh, dist_sharding.batch_spec(mesh))
-            decode_out_sh = (logits_sh, cache_sh)
-            insert_out_sh = cache_sh
-        self._decode = jax.jit(
-            lambda p, c, tok, t: lm.decode_step(p, cfg, tok, c, t),
-            donate_argnums=(1,), out_shardings=decode_out_sh)
-        self._insert = jax.jit(
-            lambda big, small, slot: jax.tree.map(
-                lambda bl, sl: lax.dynamic_update_slice_in_dim(
-                    bl, sl.astype(bl.dtype), slot, axis=1), big, small),
-            donate_argnums=(0,), out_shardings=insert_out_sh)
-        def prefill(p, cache1, toks, last):
-            iota = jnp.arange(toks.shape[1], dtype=jnp.int32)[None, :]
-            mask = iota <= last[:, None]
-            logits, cache1, _ = lm.prefill(p, cfg, toks, cache1,
-                                           pad_mask=mask, last_idx=last)
-            return logits, cache1
-
-        # one jitted prefill: jax.jit's shape-keyed cache gives exactly one
-        # trace per prompt bucket
-        self._prefill = jax.jit(prefill)
-        self._sample = jax.jit(self._sample_fn)
         self._admitted_done: List[Request] = []
 
     # -- infrastructure -----------------------------------------------------
@@ -270,47 +175,45 @@ class Engine:
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
-    def _make_cache(self, b: int):
-        cache = lm.init_cache(self.cfg, b, self.max_seq)
-        if self.mesh is not None:
-            cache = jax.device_put(
-                cache,
-                dist_sharding.cache_sharding(cache, self.mesh, batch=b))
-        return cache
-
     def _now(self) -> float:
         return time.monotonic() - self._clock0
 
-    def _bucket(self, n: int) -> int:
-        for b in self.prompt_buckets:
+    def _bucket(self, n: int, buckets: Sequence[int]) -> int:
+        for b in buckets:
             if b >= n:
                 return b
         raise ValueError(f"prompt length {n} exceeds max bucket "
-                         f"{self.prompt_buckets[-1]}")
-
-    def _sample_fn(self, key, logits, temps, rids, steps):
-        def one(lg, tmp, rid, st):
-            k = jax.random.fold_in(jax.random.fold_in(key, rid), st)
-            scaled = lg.astype(jnp.float32) / jnp.maximum(tmp, 1e-6)
-            sampled = jax.random.categorical(k, scaled)
-            return jnp.where(tmp > 0, sampled.astype(jnp.int32),
-                             jnp.argmax(lg).astype(jnp.int32))
-
-        return jax.vmap(one)(logits, temps, rids, steps)
+                         f"{buckets[-1]}")
 
     def n_traces(self) -> Dict[str, int]:
         """Compiled-trace counts (retrace monitoring for the serve bench);
-        -1 per entry if the jax version doesn't expose cache sizes."""
+        -1 per entry if the jax version doesn't expose cache sizes.
+        ``decode`` counts one trace per decode-bucket width."""
+        return self.executor.n_traces()
 
-        def size(fn) -> int:
-            get = getattr(fn, "_cache_size", None)
-            return int(get()) if callable(get) else -1
-
-        return {
-            "decode": size(self._decode),
-            "prefill": size(self._prefill),
-            "insert": size(self._insert),
-        }
+    def warm(self):
+        """Pre-trace every decode-bucket width and prefill chunk/bucket
+        width so a measured run sees steady-state traces.  Warm calls run
+        on the pool's parking rows only — no slot state is touched — and
+        must happen while the engine is idle."""
+        if self.scheduler.num_active or self.scheduler.num_pending:
+            raise RuntimeError("warm() requires an idle engine")
+        with self._mesh_ctx():
+            for w in self.scheduler.decode_widths:
+                lanes = [None] * w
+                z = np.zeros((w,), np.int32)
+                logits = self.executor.decode(lanes, z, z)
+                self.executor.sample(self._key, logits,
+                                     np.zeros((w,), np.float32), z, z)
+            widths = self._chunk_buckets or self.prompt_buckets
+            for w in widths:
+                toks = np.zeros((1, w), np.int32)
+                last = np.array([w - 1], np.int32)
+                logits = self.executor.prefill(None, toks, 0, last)
+                self.executor.sample(self._key, logits,
+                                     np.zeros((1,), np.float32),
+                                     np.zeros((1,), np.int32),
+                                     np.zeros((1,), np.int32))
 
     # -- scheduling ---------------------------------------------------------
 
@@ -324,7 +227,8 @@ class Engine:
             raise ValueError(
                 f"prompt({len(req.prompt)}) + max_new({req.max_new_tokens}) "
                 f"exceeds max_seq={self.max_seq}")
-        if len(req.prompt) > self.prompt_buckets[-1]:
+        if self.prefill_chunk is None \
+                and len(req.prompt) > self.prompt_buckets[-1]:
             raise ValueError(
                 f"prompt length {len(req.prompt)} exceeds max prompt "
                 f"bucket {self.prompt_buckets[-1]}")
@@ -334,25 +238,26 @@ class Engine:
             rid=rid, prompt_len=len(req.prompt),
             arrival_s=self._now() if arrival_s is None else arrival_s)
         req.generated = []
-        self._pending.append(req)
+        self.scheduler.enqueue(req)
 
     @property
     def num_active(self) -> int:
-        return sum(1 for s in self._slots if s.active)
+        return self.scheduler.num_active
 
     @property
     def num_pending(self) -> int:
-        return len(self._pending)
+        return self.scheduler.num_pending
 
-    def _finish(self, slot: _Slot, reason: str):
+    def _finish(self, idx: int, reason: str):
+        slot = self.scheduler.slots[idx]
         req = slot.req
         req.stats.finish_s = self._now()
         req.stats.n_tokens = len(req.generated)
         req.stats.stop_reason = reason
         self._stats.requests.append(req.stats)
-        slot.req = None
+        self.scheduler.finish(idx)
 
-    def _check_done(self, slot: _Slot, tok: int) -> Optional[str]:
+    def _check_done(self, slot: SlotState, tok: int) -> Optional[str]:
         req = slot.req
         if tok in req.stop_tokens:
             return "stop_token"
@@ -362,88 +267,118 @@ class Engine:
             return "max_seq"
         return None
 
-    def _admit_one(self, slot_idx: int, req: Request):
-        """Prefill a request into a free slot; samples its first token."""
-        slot = self._slots[slot_idx]
+    # -- prefill ------------------------------------------------------------
+
+    def _init_slot(self, idx: int, req: Request):
+        """Initialize an admitted slot's pool rows and prefill plan."""
+        slot = self.scheduler.slots[idx]
+        with self._mesh_ctx():
+            self.pool.zero_slot_state(idx)
+            if self.prefix is not None:
+                slot.prefill.snap_at = self.prefix.boundary_for(
+                    len(req.prompt))
+                hit_len, hit = self.prefix.lookup(req.prompt)
+                if hit:
+                    self.prefix.restore(idx, req.prompt, hit_len)
+                    slot.prefill.off = hit_len
+                    slot.prefill.from_prefix = True
+
+    def _run_prefill_chunk(self, idx: int) -> Optional[Request]:
+        """Advance one slot's prefill by one chunk (the whole remaining
+        prompt when chunking is off).  Returns the request if it finished
+        at admission (1-token budget or instant EOS)."""
+        slot = self.scheduler.slots[idx]
+        req, ps = slot.req, slot.prefill
         plen = len(req.prompt)
-        bucket = self._bucket(plen)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt                       # right-pad
-        last = np.array([plen - 1], np.int32)
+        if self.prefill_chunk is None:
+            take = plen - ps.off
+            width = self._bucket(take, self.prompt_buckets)
+        else:
+            take = min(self.prefill_chunk, plen - ps.off)
+            width = self._bucket(take, self._chunk_buckets)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :take] = req.prompt[ps.off:ps.off + take]   # right-pad
+        last = np.array([take - 1], np.int32)
         stats = self._stats
         with self._mesh_ctx():
             t0 = time.monotonic()
-            logits, cache1 = self._prefill(
-                self.params, self._cache1, jnp.asarray(toks),
-                jnp.asarray(last))
-            self._cache = self._insert(self._cache, cache1,
-                                       jnp.int32(slot_idx))
-            tok = self._sample(
-                self._key, logits,
-                jnp.asarray([req.temperature], jnp.float32),
-                jnp.asarray([req.stats.rid], jnp.int32),
-                jnp.asarray([0], jnp.int32))
-            tok = int(np.asarray(tok)[0])
+            logits = self.executor.prefill(idx, toks, ps.off, last)
+            if ps.off + take < plen:
+                jax.block_until_ready(logits)
             stats.prefill_s += time.monotonic() - t0
-        slot.req = req
-        slot.pos = plen
-        slot.last_tok = tok
-        slot.rid = req.stats.rid
-        slot.n_tokens = 1
+            ps.off += take
+            if self.prefix is not None and ps.off == ps.snap_at \
+                    and ps.snap_at > 0:
+                self.prefix.store(idx, req.prompt, ps.snap_at)
+            if ps.off < plen:
+                return None
+            # prompt complete: sample the first token from the last chunk's
+            # last-real-position logits
+            tok = int(np.asarray(self.executor.sample(
+                self._key, logits,
+                np.asarray([req.temperature], np.float32),
+                np.asarray([req.stats.rid], np.int32),
+                np.asarray([0], np.int32)))[0])
+        self.scheduler.prefill_done(idx, tok)
         req.generated.append(tok)
         req.stats.first_token_s = self._now()
         stats.generated_tokens += 1
         reason = self._check_done(slot, tok)
         if reason is not None:      # e.g. max_new_tokens=1 or instant EOS
-            self._finish(slot, reason)
-            self._admitted_done.append(req)
+            self._finish(idx, reason)
+            return req
+        return None
 
-    def _admit(self):
-        while self._pending:
-            if self._pending[0].stats.arrival_s > self._now():
-                break                     # respects a future arrival trace
-            free = next((i for i, s in enumerate(self._slots)
-                         if not s.active), None)
-            if free is None:
-                break
-            self._admit_one(free, self._pending.popleft())
+    def _prefill_step(self):
+        """Prefill policy for one engine step: with chunking off, complete
+        every admitted prompt (admission-time prefill, the dense-engine
+        behavior); with chunking on, advance one prefilling slot by one
+        chunk so prompts interleave with decode steps."""
+        if self.prefill_chunk is None:
+            for idx in self.scheduler.prefilling():
+                req = self._run_prefill_chunk(idx)
+                if req is not None:
+                    self._admitted_done.append(req)
+        else:
+            idxs = self.scheduler.prefilling()
+            if idxs:
+                req = self._run_prefill_chunk(idxs[0])
+                if req is not None:
+                    self._admitted_done.append(req)
 
-    def step(self) -> List[Request]:
-        """Admit what fits, then run one batched decode step.
+    # -- decode -------------------------------------------------------------
 
-        Returns the requests that finished during this step — including
-        those that finished at admission (first prefill token hit EOS or a
-        1-token budget)."""
-        self._admit()
-        finished: List[Request] = self._admitted_done
-        self._admitted_done = []
-        active = [s for s in self._slots if s.active]
-        if not active:
-            return finished
-        toks = np.array([s.last_tok for s in self._slots], np.int32)
-        # park inactive slots at their current position (their lane still
-        # computes, but writes land in a dead slot that admission overwrites)
-        pos = np.array([min(s.pos, self.max_seq - 1) for s in self._slots],
-                       np.int32)
-        temps = np.array(
-            [s.req.temperature if s.active else 0.0 for s in self._slots],
-            np.float32)
-        rids = np.array([s.rid for s in self._slots], np.int32)
-        steps = np.array([s.n_tokens for s in self._slots], np.int32)
+    def _decode_step(self) -> List[Request]:
+        n_live, lanes = self.scheduler.decode_lanes()
+        if not n_live:
+            return []
+        slots = self.scheduler.slots
+        toks = np.array([slots[j].last_tok if j is not None else 0
+                         for j in lanes], np.int32)
+        # park free/padding lanes at a harmless position (their writes land
+        # in dead slot rows or the pool's parking rows)
+        pos = np.array([min(slots[j].pos, self.max_seq - 1)
+                        if j is not None else 0 for j in lanes], np.int32)
+        temps = np.array([slots[j].req.temperature
+                          if j is not None and slots[j].decoding else 0.0
+                          for j in lanes], np.float32)
+        rids = np.array([slots[j].rid if j is not None else 0
+                         for j in lanes], np.int32)
+        steps = np.array([slots[j].n_tokens if j is not None else 0
+                          for j in lanes], np.int32)
         stats = self._stats
         t0 = time.monotonic()
         with self._mesh_ctx():
-            logits, self._cache = self._decode(
-                self.params, self._cache, jnp.asarray(toks), jnp.asarray(pos))
-            nxt = np.asarray(self._sample(
-                self._key, logits, jnp.asarray(temps), jnp.asarray(rids),
-                jnp.asarray(steps)))
+            logits = self.executor.decode(lanes, toks, pos)
+            nxt = np.asarray(self.executor.sample(
+                self._key, logits, temps, rids, steps))
         stats.decode_s += time.monotonic() - t0
         stats.decode_steps += 1
-        for i, slot in enumerate(self._slots):
-            if not slot.active:
-                continue
-            tok = int(nxt[i])
+        stats.occupancy_sum += n_live / self.batch
+        finished: List[Request] = []
+        for lane, idx in enumerate(lanes[:n_live]):     # live lanes first
+            slot = slots[idx]
+            tok = int(nxt[lane])
             slot.pos += 1
             slot.last_tok = tok
             slot.n_tokens += 1
@@ -452,11 +387,26 @@ class Engine:
             reason = self._check_done(slot, tok)
             if reason is not None:
                 req = slot.req
-                self._finish(slot, reason)
+                self._finish(idx, reason)
                 finished.append(req)
         return finished
 
-    # -- batch driver -------------------------------------------------------
+    # -- step / driver ------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """Admit what fits, advance prefill, then run one bucketed decode
+        step.  Returns the requests that finished during this step —
+        including those that finished at admission (first prefill token hit
+        EOS or a 1-token budget)."""
+        t0 = time.monotonic()
+        for idx, req in self.scheduler.admit(self._now()):
+            self._init_slot(idx, req)
+        self._prefill_step()
+        finished = self._admitted_done
+        self._admitted_done = []
+        finished += self._decode_step()
+        self._stats.busy_s += time.monotonic() - t0
+        return finished
 
     def generate(self, requests: List[Request],
                  arrival_s: Optional[Sequence[float]] = None) -> ServeStats:
@@ -475,9 +425,10 @@ class Engine:
             order = sorted(range(len(requests)), key=lambda i: arrival_s[i])
             for i in order:
                 self.submit(requests[i], arrival_s=float(arrival_s[i]))
-        while self._pending or self.num_active:
-            if not self.num_active and self._pending:
-                wait = self._pending[0].stats.arrival_s - self._now()
+        sched = self.scheduler
+        while sched.num_pending or sched.num_active:
+            if not sched.num_active and sched.num_pending:
+                wait = sched.next_arrival_s - self._now()
                 if wait > 0:
                     time.sleep(min(wait, 0.01))
             self.step()

@@ -181,8 +181,11 @@ def test_tokens_per_s_counts_generated_tokens(tiny):
     reqs = _mk_requests(cfg, [(3, 4, 0.0, ())] * 4)
     stats = eng.generate(reqs)
     assert stats.generated_tokens == sum(len(r.generated) for r in reqs) == 16
+    # measured runs divide by the engine-busy wall-clock span, which covers
+    # at least the model time (prefill + decode) plus host bookkeeping
+    assert stats.busy_s >= stats.prefill_s + stats.decode_s
     assert stats.tokens_per_s == pytest.approx(
-        stats.generated_tokens / (stats.prefill_s + stats.decode_s))
+        stats.generated_tokens / stats.busy_s)
     # a 1-token workload produces all its tokens in prefill: decode_s is 0
     # but throughput must still be real (the old metric divided by zero)
     r1 = _mk_requests(cfg, [(3, 1, 0.0, ())] * 2)
@@ -202,7 +205,9 @@ def test_slot_reuse_and_continuous_admission(tiny):
     stats = eng.generate(reqs)
     assert [len(r.generated) for r in reqs] == [m for _, m, _, _ in spec]
     assert len(stats.requests) == 5
-    assert eng.n_traces()["decode"] in (1, -1)
+    # bucketed decode on a 2-slot engine traces at most widths {1, 2}
+    nt = eng.n_traces()["decode"]
+    assert nt == -1 or 1 <= nt <= 2
     # continuous batching: total steps is far below the group-barrier cost
     # (ceil(5/2) groups x max_new=6 would be 18 steps)
     assert stats.decode_steps < 18

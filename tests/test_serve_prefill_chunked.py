@@ -1,0 +1,161 @@
+"""Chunked-prefill exactness: resumed prefill chunks == single-shot prefill.
+
+Model layer: splitting a prompt into ``start=``-resumed chunks must be
+*bit-exact* against one single-shot ragged prefill — logits at the last
+real token and every cache leaf — for all three block types (attention,
+mamba, rwkv).  Chunk widths are multiples of ``SSM_PREFILL_GRID`` so the
+mamba associative-scan windows align to absolute positions regardless of
+where the chunk boundaries fall.
+
+Engine layer: serving with ``prefill_chunk=`` (and with ``prefix_cache=``
+hits restoring a mid-prompt snapshot) is token-identical to the unchunked
+engine, which PR-2 already pinned to sequential single-request generation.
+
+Boundary cases follow the issue checklist: prompt lengths 1, C-1, C, C+1
+around the chunk size C.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+CHUNK = 8   # == lm.SSM_PREFILL_GRID: the smallest legal serve chunk
+
+
+def _cfg(arch):
+    return get_config(arch, smoke=True).scaled_down(
+        d_model=64, d_ff=128, vocab_size=256)
+
+
+def _chunked_vs_single(arch, plen, max_seq=32):
+    cfg = _cfg(arch)
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(plen)
+    prompt = rng.integers(1, 250, size=plen).astype(np.int32)
+
+    def ragged_call(cache, toks, start, take):
+        width = toks.shape[1]
+        mask = np.zeros((1, width), bool)
+        mask[0, :take] = True
+        last = np.array([take - 1], np.int32)
+        return lm.prefill(params, cfg, jax.numpy.asarray(toks), cache,
+                          pad_mask=jax.numpy.asarray(mask),
+                          last_idx=jax.numpy.asarray(last),
+                          start=jax.numpy.int32(start))
+
+    # single shot: one ragged call over the bucketed prompt width
+    width = CHUNK
+    while width < plen:
+        width *= 2
+    toks = np.zeros((1, width), np.int32)
+    toks[0, :plen] = prompt
+    logits_ref, cache_ref, _ = ragged_call(
+        lm.init_cache(cfg, 1, max_seq), toks, 0, plen)
+
+    # chunked: resume every CHUNK tokens
+    cache = lm.init_cache(cfg, 1, max_seq)
+    off = 0
+    while off < plen:
+        take = min(CHUNK, plen - off)
+        toks = np.zeros((1, CHUNK), np.int32)
+        toks[0, :take] = prompt[off:off + take]
+        logits, cache, _ = ragged_call(cache, toks, off, take)
+        off += take
+
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits_ref))
+    for (path, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(cache),
+            jax.tree_util.tree_leaves_with_path(cache_ref)):
+        name = jax.tree_util.keystr(path)
+        if "k" in name.lower() or "v" in name.lower():
+            # KV rows beyond the prompt are never read (kv_valid masks by
+            # absolute position); compare the written region only
+            np.testing.assert_array_equal(
+                np.asarray(a)[:, :, :plen], np.asarray(b)[:, :, :plen],
+                err_msg=f"{arch} plen={plen} leaf={name}")
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{arch} plen={plen} "
+                                                  f"leaf={name}")
+
+
+@pytest.mark.parametrize("plen", [1, CHUNK - 1, CHUNK, CHUNK + 1,
+                                  2 * CHUNK, 3 * CHUNK + 3])
+def test_chunked_prefill_bitexact_attn(plen):
+    _chunked_vs_single("llama3.2-1b", plen)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "rwkv6-3b"])
+@pytest.mark.parametrize("plen", [1, CHUNK - 1, CHUNK, CHUNK + 1,
+                                  3 * CHUNK + 3])
+def test_chunked_prefill_bitexact_recurrent(arch, plen):
+    _chunked_vs_single(arch, plen)
+
+
+# -- engine level -----------------------------------------------------------
+
+
+def _serve(cfg, params, prompts, batch_size=4, **kw):
+    eng = Engine(cfg, params, max_seq=48, batch_size=batch_size, **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=5,
+                    temperature=0.8 if i % 2 else 0.0)
+            for i, p in enumerate(prompts)]
+    eng.generate(reqs)
+    return [r.generated for r in reqs], eng
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _cfg("llama3.2-1b")
+    return cfg, lm.init_params(jax.random.PRNGKey(7), cfg)
+
+
+def test_engine_chunked_prefill_token_identity(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 250, size=n))
+               for n in (3, 17, 24, 9, 24, 30)]
+    base, _ = _serve(cfg, params, prompts)
+    for chunk in (8, 16):
+        got, eng = _serve(cfg, params, prompts, prefill_chunk=chunk)
+        assert got == base, chunk
+        # chunk widths trace at most the chunk ladder, decode widths at
+        # most the slot ladder — no per-prompt-length retraces
+        nt = eng.n_traces()
+        assert nt["prefill"] == -1 or nt["prefill"] <= len(
+            [b for b in (8, 16) if b <= chunk])
+
+
+def test_engine_prefix_cache_token_identity(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    shared = list(rng.integers(1, 250, size=20))
+    prompts = [shared + list(rng.integers(1, 250, size=k))
+               for k in (4, 7, 2, 9)]
+    # 2 slots so requests 2/3 are admitted after request 0's snapshot
+    # exists (a full-width admission wave would all miss together)
+    base, _ = _serve(cfg, params, prompts, batch_size=2)
+    got, eng = _serve(cfg, params, prompts, batch_size=2, prefill_chunk=8,
+                      prefix_cache=True)
+    assert got == base
+    st = eng.prefix.stats()
+    # requests admitted after the first snapshot restore it (the first
+    # admission wave looks up before anything is stored)
+    assert st["hits"] >= 2 and st["entries"] >= 1, st
+    # a prefix hit skips recomputing the shared prefix: the restored
+    # request resumes mid-prompt
+    assert eng.pool.n_free_pages >= 0
+
+
+def test_engine_prefix_cache_rejects_bad_chunk(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Engine(cfg, params, max_seq=48, batch_size=2, prefill_chunk=12)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Engine(cfg, params, max_seq=48, batch_size=2, prefill_chunk=4)
+    with pytest.raises(ValueError, match="page_size"):
+        Engine(cfg, params, max_seq=48, batch_size=2, page_size=32)

@@ -1,0 +1,261 @@
+"""Scheduler / paged-cache-pool unit and property tests (host-side).
+
+The scheduling layer is pure Python (no jax in the decision path), so these
+tests drive admission, bucketed decode-lane construction and the page/state
+free lists directly through the public API — never by poking engine
+internals — across randomized admit/finish interleavings.
+"""
+import numpy as np
+import jax
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs import get_config
+from repro.serve.cache import PagedCachePool, PrefixCache, default_page_size
+from repro.serve.scheduler import (Request, RequestStats, Scheduler,
+                                   decode_widths_for, prompt_buckets_for)
+
+
+def _mk_req(rid, plen=4, arrival=0.0):
+    r = Request(prompt=list(range(1, plen + 1)), max_new_tokens=4)
+    r.stats = RequestStats(rid=rid, prompt_len=plen, arrival_s=arrival)
+    r.generated = []
+    return r
+
+
+def test_decode_width_ladder():
+    assert decode_widths_for(1) == (1,)
+    assert decode_widths_for(2) == (1, 2)
+    assert decode_widths_for(64) == (1, 2, 4, 8, 16, 32, 64)
+    # non-power-of-two slot counts top out at the exact slot count
+    assert decode_widths_for(6) == (1, 2, 4, 6)
+    # the prompt ladder shape is shared (anchored at MIN_BUCKET instead)
+    assert prompt_buckets_for(64) == (8, 16, 32, 64)
+
+
+def test_bucketed_lanes_smallest_cover():
+    sched = Scheduler(64, 32)
+    for i in range(5):
+        sched.enqueue(_mk_req(i))
+    admitted = sched.admit(now=0.0)
+    assert [idx for idx, _ in admitted] == [0, 1, 2, 3, 4]
+    for idx, _ in admitted:
+        sched.prefill_done(idx, first_token=1)
+    n_live, lanes = sched.decode_lanes()
+    assert n_live == 5 and len(lanes) == 8          # smallest bucket >= 5
+    assert lanes[:5] == [0, 1, 2, 3, 4]             # live lanes first
+    # padding lanes are distinct free slots, never live ones
+    assert sorted(set(lanes[5:])) == sorted(lanes[5:])
+    assert not set(lanes[5:]) & set(lanes[:5])
+    sched.finish(1)
+    sched.finish(3)
+    n_live, lanes = sched.decode_lanes()
+    assert n_live == 3 and len(lanes) == 4          # shrinks with the load
+
+
+def test_prefilling_slots_never_pad_decode():
+    """A mid-prefill slot holds real partial state: it must neither decode
+    nor serve as a padding lane."""
+    sched = Scheduler(4, 32)
+    for i in range(4):
+        sched.enqueue(_mk_req(i))
+    sched.admit(now=0.0)
+    for i in (0, 1, 2):
+        sched.prefill_done(i, first_token=1)        # slot 3 stays mid-prefill
+    n_live, lanes = sched.decode_lanes()
+    assert n_live == 3 and len(lanes) == 4
+    assert lanes[:3] == [0, 1, 2]
+    # no free slots left: the pad lane parks (None), it never borrows the
+    # mid-prefill slot's rows
+    assert lanes[3] is None
+    assert sched.prefilling() == [3]
+
+
+def test_prefilling_round_robin():
+    sched = Scheduler(4, 32)
+    for i in range(3):
+        sched.enqueue(_mk_req(i))
+    sched.admit(now=0.0)
+    heads = [sched.prefilling()[0] for _ in range(6)]
+    assert heads == [0, 1, 2, 0, 1, 2]              # fair chunk interleave
+
+
+def test_admission_respects_arrival_trace():
+    sched = Scheduler(4, 32)
+    sched.enqueue(_mk_req(0, arrival=0.0))
+    sched.enqueue(_mk_req(1, arrival=5.0))
+    assert [i for i, _ in sched.admit(now=1.0)] == [0]
+    assert sched.num_pending == 1 and sched.next_arrival_s == 5.0
+    assert [i for i, _ in sched.admit(now=6.0)] == [1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_no_slot_leaks_random_interleaving(seed):
+    """Random admit / prefill_done / finish interleavings: every request is
+    eventually seated exactly once, lanes never alias, and finished slots
+    return to the free set (no leaks)."""
+    rng = np.random.default_rng(seed)
+    n_slots = int(rng.integers(1, 9))
+    sched = Scheduler(n_slots, 32)
+    total = int(rng.integers(5, 25))
+    submitted = seated = finished = 0
+    live = set()
+    for step in range(200):
+        if submitted < total and rng.random() < 0.5:
+            sched.enqueue(_mk_req(submitted))
+            submitted += 1
+        for idx, _req in sched.admit(now=0.0):
+            assert idx not in live
+            live.add(idx)
+            seated += 1
+        for idx in list(sched.prefilling()):
+            if rng.random() < 0.7:
+                sched.prefill_done(idx, first_token=1)
+        n_live, lanes = sched.decode_lanes()
+        real = [x for x in lanes if x is not None]
+        assert len(real) == len(set(real))          # no duplicate slot lanes
+        assert len(lanes) in decode_widths_for(n_slots) or not lanes
+        for idx in lanes[:n_live]:
+            if rng.random() < 0.3:
+                sched.finish(idx)
+                live.discard(idx)
+                finished += 1
+        assert sched.num_active == len(live)
+    # drain: everything seated finishes
+    for i in range(n_slots):
+        if sched.slots[i].active:
+            sched.finish(i)
+            finished += 1
+    while sched.num_pending:
+        for idx, _ in sched.admit(now=0.0):
+            sched.prefill_done(idx, first_token=1)
+            sched.finish(idx)
+            seated += 1
+            finished += 1
+    assert seated == finished == submitted
+    assert sched.num_active == 0
+
+
+# -- paged pool -------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("llama3.2-1b", smoke=True).scaled_down(
+        d_model=64, d_ff=128, vocab_size=256, n_heads=4, n_kv_heads=2,
+        head_dim=16)
+
+
+def test_default_page_size():
+    assert default_page_size(512) == 64
+    assert default_page_size(48) == 16
+    assert default_page_size(24) == 8
+
+
+def test_pool_tables_and_free_lists(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=4, max_seq=32, page_size=8,
+                          snapshot_slots=2)
+    pps = pool.pages_per_slot
+    assert pps == 4
+    # slot rows + parking rows + snapshot region are disjoint
+    slot_pages = set(pool.page_table.ravel().tolist())
+    park = set(pool.parking_pages.tolist())
+    free = set(pool._free_pages)
+    assert len(slot_pages) == 4 * pps
+    assert not slot_pages & park and not (slot_pages | park) & free
+    assert pool.n_free_pages >= 2 * pps             # snapshot region
+    assert pool.parking_state not in set(pool.state_table.tolist())
+
+    # snapshot allocate / restore / release round-trips the free lists
+    before = (pool.n_free_pages, pool.n_free_states)
+    h = pool.take_snapshot(1, n_pages=2)
+    assert h is not None
+    assert pool.n_free_pages == before[0] - 2
+    assert pool.n_free_states == before[1] - 1
+    pool.restore_snapshot(3, h)                     # copy back, no alloc
+    assert (pool.n_free_pages, pool.n_free_states) == (before[0] - 2,
+                                                       before[1] - 1)
+    pool.release_snapshot(h)
+    assert (pool.n_free_pages, pool.n_free_states) == before
+
+    # exhaustion returns None instead of corrupting rows
+    handles = []
+    while (h := pool.take_snapshot(0, n_pages=2)) is not None:
+        handles.append(h)
+    assert pool.take_snapshot(0, n_pages=2) is None
+    for h in handles:
+        pool.release_snapshot(h)
+    assert (pool.n_free_pages, pool.n_free_states) == before
+
+
+def test_lane_rows_parking(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=4, max_seq=32, page_size=8)
+    prows, srows = pool.lane_rows([2, None, 0, None])
+    assert prows.shape == (4, pool.pages_per_slot)
+    np.testing.assert_array_equal(prows[0], pool.page_table[2])
+    np.testing.assert_array_equal(prows[1], pool.parking_pages)
+    assert srows.tolist() == [pool.state_table[2], pool.parking_state,
+                              pool.state_table[0], pool.parking_state]
+
+
+def test_pool_copy_semantics(tiny_cfg):
+    """Snapshots are copies: mutating the source slot after take_snapshot
+    must not leak into a later restore (copy-on-reference both ways)."""
+    pool = PagedCachePool(tiny_cfg, n_slots=2, max_seq=32, page_size=8,
+                          snapshot_slots=1)
+
+    def poke(slot, value):
+        rows = pool.page_table[slot]
+        srow = pool.state_table[slot]
+        def leaf(path, p):
+            import jax.numpy as jnp
+            from repro.serve.cache import is_paged_leaf
+            if is_paged_leaf(path):
+                return p.at[:, rows].set(value)
+            return p.at[:, srow].set(value)
+        pool.pools = jax.tree_util.tree_map_with_path(leaf, pool.pools)
+
+    def read_page0(slot):
+        leaves = jax.tree_util.tree_leaves_with_path(pool.pools)
+        from repro.serve.cache import is_paged_leaf
+        for path, p in leaves:
+            if is_paged_leaf(path):
+                return float(np.asarray(p[0, pool.page_table[slot][0]]).ravel()[0])
+        raise AssertionError("no paged leaf")
+
+    poke(0, 3.0)
+    h = pool.take_snapshot(0, n_pages=2)
+    poke(0, 7.0)                                    # source diverges
+    pool.restore_snapshot(1, h)
+    assert read_page0(0) == 7.0
+    assert read_page0(1) == 3.0                     # snapshot-time contents
+
+
+def test_prefix_cache_lru_and_boundaries(tiny_cfg):
+    pool = PagedCachePool(tiny_cfg, n_slots=1, max_seq=32, page_size=8,
+                          snapshot_slots=2)
+    pfx = PrefixCache(pool, align=8, max_entries=2)
+    assert pfx.boundary_for(5) == 0                 # shorter than align
+    assert pfx.boundary_for(8) == 0                 # one token must remain
+    assert pfx.boundary_for(9) == 8
+    assert pfx.boundary_for(17) == 16
+    p1, p2, p3 = ([1] * 24, [2] * 24, [3] * 24)
+    pfx.store(0, p1, 8)
+    pfx.store(0, p2, 8)
+    assert pfx.lookup(p1) == (8, True)              # p1 now most-recent
+    pfx.store(0, p3, 8)                             # evicts p2 (LRU)
+    assert pfx.lookup(p2) == (0, False)
+    assert pfx.lookup(p1) == (8, True)
+    assert pfx.lookup(p3) == (8, True)
+    assert len(pfx) == 2
+    assert pfx.stats()["hits"] == 3 and pfx.stats()["misses"] == 1
+    # longest-prefix match: a prompt sharing only the first 8 tokens of a
+    # 16-deep entry falls back to the shorter boundary (fresh pool — the one
+    # above has spent its snapshot rows on p1/p3)
+    pool2 = PagedCachePool(tiny_cfg, n_slots=1, max_seq=32, page_size=8,
+                           snapshot_slots=2)
+    pfx2 = PrefixCache(pool2, align=8, max_entries=2)
+    pfx2.store(0, p1, 16)
+    assert pfx2.lookup(p1[:8] + [9] * 16) == (0, False)
+    assert pfx2.lookup(p1[:16] + [9] * 8) == (16, True)

@@ -131,7 +131,8 @@ def serve(mesh_arg):
     eng = Engine(cfg, jax.device_get(p2), max_seq=32, batch_size=8,
                  mesh=mesh_arg)   # p2: post-step params (params was donated)
     stats = eng.generate(reqs)
-    assert eng.n_traces()["decode"] in (1, -1), eng.n_traces()
+    nt = eng.n_traces()["decode"]
+    assert nt == -1 or 1 <= nt <= 4, eng.n_traces()
     return [r.generated for r in reqs]
 
 sharded_out = serve(mesh)

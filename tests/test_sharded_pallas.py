@@ -155,7 +155,8 @@ def serve(cfg, backend, mesh_arg):
     eng = Engine(cfg, params, max_seq=32, batch_size=8,
                  context=ExecContext(backend=backend, mesh=mesh_arg))
     eng.generate(reqs)
-    assert eng.n_traces()["decode"] in (1, -1), eng.n_traces()
+    nt = eng.n_traces()["decode"]
+    assert nt == -1 or 1 <= nt <= 4, eng.n_traces()
     return [r.generated for r in reqs]
 
 pallas_sharded = serve(cfg, "pallas", mesh)
