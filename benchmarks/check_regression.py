@@ -26,6 +26,17 @@ off a cliff).  The serve rows use their own looser ``--serve-tol`` (default
 50%): the scaling curve swings ±25% run-to-run from scheduler noise on
 shared CI hosts, so the serve gate is a cliff detector, not a
 percent-level tracker like the interleaved GEMM ratios.
+
+Measured-traffic rows are gated with ``--roofline-baseline
+BENCH_roofline.json --roofline-new /tmp/bench/BENCH_roofline.json``: the
+``measured_over_analytic`` ratio of every ``roofline/traffic_*`` row —
+compiled bytes-accessed over the analytic plane-traffic model — may not
+rise more than ``--roofline-tol`` (default 10%) above the committed
+baseline.  The ratio is deterministic compiler output (no wall-clock in
+it), so the gate needs no normalization and a tight tolerance holds; a
+kernel change that adds an HBM pass moves the ratio far more than 10%.
+NEW rows (a widened shape sweep) are surfaced un-gated like the other
+groups.
 """
 from __future__ import annotations
 
@@ -126,6 +137,19 @@ def main(argv=None) -> int:
                     help="tolerance for the serve rows (looser than --tol: "
                          "the scaling curve rides scheduler noise on shared "
                          "CI hosts; 0.5 still catches a slot-scaling cliff)")
+    ap.add_argument("--roofline-baseline", default=None,
+                    help="committed BENCH_roofline.json: gates the "
+                         "measured/analytic traffic ratio of every "
+                         "roofline/traffic_* row (lower-is-better; the "
+                         "ratio is deterministic compiler output, so the "
+                         "gate is machine-independent with no --normalize)")
+    ap.add_argument("--roofline-new", default=None,
+                    help="fresh BENCH_roofline.json to compare against "
+                         "--roofline-baseline")
+    ap.add_argument("--roofline-tol", type=float, default=0.10,
+                    help="tolerance for the traffic-ratio rows: a GEMM "
+                         "path's measured bytes may not drift more than "
+                         "this fraction above its committed ratio")
     args = ap.parse_args(argv)
     n_fail = compare(load_rows(args.baseline), load_rows(args.new),
                      args.tol, tuple(args.match), args.normalize)
@@ -138,6 +162,14 @@ def main(argv=None) -> int:
             load_rows(args.serve_new, metric="tokens_per_s"),
             args.serve_tol, ("serve/",), args.serve_normalize,
             higher_better=True)
+    if (args.roofline_baseline is None) != (args.roofline_new is None):
+        raise SystemExit("--roofline-baseline and --roofline-new go together")
+    if args.roofline_new is not None:
+        print()
+        n_fail += compare(
+            load_rows(args.roofline_baseline, metric="measured_over_analytic"),
+            load_rows(args.roofline_new, metric="measured_over_analytic"),
+            args.roofline_tol, ("roofline/",))
     if n_fail:
         print(f"\n{n_fail} row(s) regressed beyond tolerance")
         return 1

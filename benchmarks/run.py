@@ -73,6 +73,9 @@ def main() -> None:
                              "roofline"],
                     help="run a single benchmark group (e.g. the CI "
                          "bench-regression step runs --only walltime)")
+    ap.add_argument("--roofline-smoke", action="store_true",
+                    help="measure traffic on the tiny SMOKE_SHAPES instead "
+                         "of the tuned deep-K bench shapes (CI obs-smoke)")
     args = ap.parse_args()
 
     if args.tuning_table:
@@ -123,7 +126,16 @@ def main() -> None:
         record("sharded", rows, bench_sharded.checks(rows))
 
     if wants("roofline"):
-        record("roofline", bench_roofline.run(args.dryrun_dir), [])
+        # Measured traffic (compiled bytes-accessed, repro.obs.traffic) of
+        # the fused / staged / xla GEMM paths vs the analytic plane-traffic
+        # model, plus the dry-run roofline table when artifacts exist.
+        from repro.obs import traffic
+        shapes = traffic.SMOKE_SHAPES if args.roofline_smoke \
+            else traffic.DEFAULT_SHAPES
+        t_rows = traffic.traffic_rows(shapes, w=traffic.DEFAULT_W)
+        d_rows = bench_roofline.run(args.dryrun_dir)
+        record("roofline", t_rows + d_rows,
+               traffic.traffic_checks(t_rows) + bench_roofline.checks(d_rows))
 
     print("\n".join(csv_lines))
     print()

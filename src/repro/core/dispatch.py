@@ -19,6 +19,16 @@ import math
 from dataclasses import dataclass, replace
 from typing import List, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+
+# Plan-selection traffic by (variant, backend, bucketed shape).  select_plan
+# runs at trace time (host Python) — the counter sees one hit per trace, not
+# per executed call, and costs one flag test when metrics are disabled.
+_PLANS_SELECTED = obs_metrics.counter(
+    "repro_plans_selected_total",
+    "select_plan resolutions by variant/backend/bucketed shape",
+    labels=("variant", "backend", "bucket", "source"))
+
 
 class Mode(enum.Enum):
     MM1 = "mm1"
@@ -308,6 +318,26 @@ def select_plan(shape: Tuple[int, int, int], w: int, *, m: int = 8,
     fp32 correction terms round differently.  Tuning therefore never changes
     ``quantized_matmul`` results, only how fast they are computed.
     """
+    plan = _select_plan_impl(shape, w, m=m, backend=backend, exact=exact,
+                             table=table, pin_numerics=pin_numerics,
+                             context=context)
+    if obs_metrics.enabled():
+        _PLANS_SELECTED.inc(plan.variant, plan.backend,
+                            "x".join(str(d) for d in _bucket_cached(shape)),
+                            plan.source)
+    return plan
+
+
+@functools.lru_cache(maxsize=4096)
+def _bucket_cached(shape: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    from repro.tune.space import bucket_shape   # lazy: core must not
+    return bucket_shape(shape)                  # hard-depend on tune
+
+
+def _select_plan_impl(shape: Tuple[int, int, int], w: int, *, m: int = 8,
+                      backend: str = "xla", exact: bool = False,
+                      table=None, pin_numerics: bool = True,
+                      context=None) -> ExecPlan:
     if context is not None:
         backend = context.backend
         if table is None and context.tuning_table is not None:

@@ -44,6 +44,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.dispatch import ExecPlan, GemmShardSpec
 from repro.dist import sharding as dist_sharding
+from repro.obs import metrics as obs_metrics
 
 Array = jax.Array
 Shape = Tuple[int, int, int]
@@ -53,6 +54,14 @@ log = logging.getLogger("repro.dist")
 # One fallback log line per (shape, w, reason): negotiation runs at trace
 # time inside jit caches, but also once per eager call — don't spam.
 _LOGGED_FALLBACKS = set()
+
+# Every fallback occurrence is COUNTED per (shape, w, reason) even though
+# only the first is logged — a 64-slot serve run shows up as one log line
+# and an honest count here.
+_FALLBACKS = obs_metrics.counter(
+    "repro_shard_gemm_fallback_total",
+    "shard-mapped pallas GEMMs downgraded to XLA, by shape/w/reason",
+    labels=("shape", "w", "reason"))
 
 
 def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
@@ -110,7 +119,13 @@ def negotiate(shape: Shape, mesh: Optional[Mesh], *,
 
 
 def log_fallback(shape: Shape, w: int, reason: str) -> None:
-    """Log one capability-negotiation XLA downgrade per (shape, w, reason)."""
+    """Record a capability-negotiation XLA downgrade.
+
+    Deduplication is explicit and applies to the LOG LINE only (once per
+    unique (shape, w, reason) key); the metrics counter sees every
+    occurrence, so fallback volume stays observable without log flood.
+    """
+    _FALLBACKS.inc("x".join(str(d) for d in shape), w, reason)
     key = (shape, w, reason)
     if key in _LOGGED_FALLBACKS:
         return

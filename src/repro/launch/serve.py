@@ -50,12 +50,28 @@ def main() -> int:
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve sharded on a (data, model) mesh, e.g. 2x4 "
                          "(needs data*model visible devices)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the repro.obs metrics registry and write a "
+                         "JSON snapshot here after generation")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable the repro.obs span tracer and write a "
+                         "Chrome-trace (chrome://tracing / Perfetto) JSON "
+                         "file here after generation")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.core.context import ExecContext
     from repro.models import lm
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs_trace
     from repro.serve.engine import Engine, Request
+
+    # Observability is opt-in: enable before engine construction so plan
+    # selection / compile-time counters during warmup are captured too.
+    if args.metrics_out:
+        obs_metrics.enable()
+    if args.trace_out:
+        obs_trace.enable()
 
     mesh = None
     if args.mesh:
@@ -94,6 +110,12 @@ def main() -> int:
           f"traces={engine.n_traces()}")
     if engine.prefix is not None:
         print(f"prefix cache: {engine.prefix.stats()}")
+    if args.metrics_out:
+        obs_metrics.write_snapshot(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        obs_trace.export_chrome(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
     return 0
 
 

@@ -48,11 +48,25 @@ from repro.core.dispatch import analytic_plan, select_plan
 from repro.core.kmm import kmm_n, max_exact_k, mm_n
 from repro.kernels import ops
 from repro.kernels.fused_gemm import fused_gemm, fused_gemm_grouped
+from repro.obs import metrics as obs_metrics
 from repro.quant.quantize import quantize_symmetric
 
 Array = jax.Array
 
 BACKENDS = ("xla", "pallas")
+
+# Routing traffic of the quantized GEMM dispatch (trace-time, host-side:
+# one hit per jit trace, a flag test when metrics are disabled).
+_GEMM_ROUTES = obs_metrics.counter(
+    "repro_quant_gemm_routes_total",
+    "quantized-GEMM dispatch outcomes by backend and route",
+    labels=("backend", "route"))
+# Reasons the pallas route declined a GEMM (the table-independent XLA
+# fallbacks; mesh-negotiation fallbacks count in repro.dist's counter).
+_PALLAS_FALLBACKS = obs_metrics.counter(
+    "repro_pallas_fallback_total",
+    "pallas-route declines by reason (GEMM fell back to XLA)",
+    labels=("reason",))
 
 
 def _quantize(x: Array, w: int, axis) -> Tuple[Array, Array]:
@@ -248,6 +262,7 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
     batched = (qx.ndim == 3 and qw.ndim == 3
                and dims == (((2,), (1,)), ((0,), (0,))))
     if not dense and not batched:
+        _PALLAS_FALLBACKS.inc("unsupported_dims")
         return None
     if dense:
         k_dim = qx.shape[-1]
@@ -258,6 +273,7 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
         n_dim = qw.shape[2]
     shape = (m_dim, k_dim, n_dim)
     if analytic_plan(w, m, backend="pallas").variant != "fused":
+        _PALLAS_FALLBACKS.inc("outside_fused_window")
         return None                     # MM2 window / deep recursion
     if context is not None and context.mesh is not None \
             and not getattr(context.mesh, "empty", False):
@@ -265,6 +281,7 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
                                out_dtype, context)
     plan = _fused_plan_for(shape, w, m, context)
     if plan is None:
+        _PALLAS_FALLBACKS.inc("kernel_bounds")
         return None
     if plan.variant == "fused":
         plan = replace(plan, epilogue="dequant")
@@ -303,7 +320,11 @@ def _quant_gemm(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
         out = _fused_pallas(qx, qw, sx, sw, w, m, dims, out_dtype,
                             context=context)
         if out is not None:
+            _GEMM_ROUTES.inc(context.backend, "pallas")
             return out
+        _GEMM_ROUTES.inc(context.backend, "xla_fallback")
+    else:
+        _GEMM_ROUTES.inc(context.backend, "xla")
     acc = _int_dot(qx, qw, w, m, dims, context.force_mode)
     return (acc * (sx * sw)).astype(out_dtype)
 

@@ -53,6 +53,8 @@ from jax.sharding import Mesh
 
 from repro.core.context import ExecContext, resolve_context
 from repro.dist import sharding as dist_sharding
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.cache import PagedCachePool, PrefixCache, default_page_size
 from repro.serve.executor import Executor
 from repro.serve.scheduler import (MIN_BUCKET, Request, RequestStats,
@@ -65,6 +67,20 @@ __all__ = ["Engine", "Request", "RequestStats", "ServeStats", "SlotState",
 log = logging.getLogger("repro.serve")
 
 Params = Any
+
+# Serve-path instruments (DESIGN.md §14).  All observations happen in host
+# Python around the executor's compiled calls — never inside them — so
+# enabling metrics/tracing cannot change a sampled token; disabled (the
+# default) each site costs a flag test.
+_TTFT = obs_metrics.histogram(
+    "repro_serve_ttft_seconds", "arrival to first token, per request")
+_DECODE_STEP = obs_metrics.histogram(
+    "repro_serve_decode_step_seconds", "wall time of one bucketed decode step")
+_OCCUPANCY = obs_metrics.gauge(
+    "repro_serve_occupancy", "live slots / total slots at the last decode step")
+_FINISHED = obs_metrics.counter(
+    "repro_serve_finished_total", "finished requests by stop reason",
+    labels=("reason",))
 
 
 class Engine:
@@ -238,6 +254,8 @@ class Engine:
             rid=rid, prompt_len=len(req.prompt),
             arrival_s=self._now() if arrival_s is None else arrival_s)
         req.generated = []
+        obs_trace.begin_async("request", rid, prompt_len=len(req.prompt),
+                              max_new=req.max_new_tokens)
         self.scheduler.enqueue(req)
 
     @property
@@ -254,6 +272,9 @@ class Engine:
         req.stats.finish_s = self._now()
         req.stats.n_tokens = len(req.generated)
         req.stats.stop_reason = reason
+        _FINISHED.inc(reason)
+        obs_trace.end_async("request", req.stats.rid, reason=reason,
+                            n_tokens=req.stats.n_tokens)
         self._stats.requests.append(req.stats)
         self.scheduler.finish(idx)
 
@@ -302,9 +323,11 @@ class Engine:
         stats = self._stats
         with self._mesh_ctx():
             t0 = time.monotonic()
-            logits = self.executor.prefill(idx, toks, ps.off, last)
-            if ps.off + take < plen:
-                jax.block_until_ready(logits)
+            with obs_trace.span("prefill_chunk", slot=idx,
+                                rid=req.stats.rid, off=ps.off, width=width):
+                logits = self.executor.prefill(idx, toks, ps.off, last)
+                if ps.off + take < plen:
+                    jax.block_until_ready(logits)
             stats.prefill_s += time.monotonic() - t0
             ps.off += take
             if self.prefix is not None and ps.off == ps.snap_at \
@@ -322,6 +345,7 @@ class Engine:
         self.scheduler.prefill_done(idx, tok)
         req.generated.append(tok)
         req.stats.first_token_s = self._now()
+        _TTFT.observe(req.stats.ttft_s)
         stats.generated_tokens += 1
         reason = self._check_done(slot, tok)
         if reason is not None:      # e.g. max_new_tokens=1 or instant EOS
@@ -369,12 +393,17 @@ class Engine:
         stats = self._stats
         t0 = time.monotonic()
         with self._mesh_ctx():
-            logits = self.executor.decode(lanes, toks, pos)
-            nxt = np.asarray(self.executor.sample(
-                self._key, logits, temps, rids, steps))
-        stats.decode_s += time.monotonic() - t0
+            with obs_trace.span("decode_step", n_live=n_live,
+                                width=len(lanes)):
+                logits = self.executor.decode(lanes, toks, pos)
+                nxt = np.asarray(self.executor.sample(
+                    self._key, logits, temps, rids, steps))
+        dt = time.monotonic() - t0
+        stats.decode_s += dt
         stats.decode_steps += 1
         stats.occupancy_sum += n_live / self.batch
+        _DECODE_STEP.observe(dt)
+        _OCCUPANCY.set(n_live / self.batch)
         finished: List[Request] = []
         for lane, idx in enumerate(lanes[:n_live]):     # live lanes first
             slot = slots[idx]
@@ -399,12 +428,13 @@ class Engine:
         including those that finished at admission (first prefill token hit
         EOS or a 1-token budget)."""
         t0 = time.monotonic()
-        for idx, req in self.scheduler.admit(self._now()):
-            self._init_slot(idx, req)
-        self._prefill_step()
-        finished = self._admitted_done
-        self._admitted_done = []
-        finished += self._decode_step()
+        with obs_trace.span("engine_step"):
+            for idx, req in self.scheduler.admit(self._now()):
+                self._init_slot(idx, req)
+            self._prefill_step()
+            finished = self._admitted_done
+            self._admitted_done = []
+            finished += self._decode_step()
         self._stats.busy_s += time.monotonic() - t0
         return finished
 

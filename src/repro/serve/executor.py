@@ -27,9 +27,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
 from repro.serve.cache import PagedCachePool, is_paged_leaf
 
 Params = Any
+
+# Compile events per jit kind (decode/prefill/sample): tracked as deltas of
+# the jit cache size after each call, only when metrics are enabled —
+# steady-state decode must show zero growth (the retrace regression the
+# serve bench gates on).
+_RETRACES = obs_metrics.counter(
+    "repro_serve_retraces_total",
+    "jit (re)compiles observed by the serve executor, by kind",
+    labels=("kind",))
+_LANE_WIDTHS = obs_metrics.counter(
+    "repro_serve_decode_lane_width_total",
+    "decode calls by bucketed lane width",
+    labels=("width",))
 
 
 class Executor:
@@ -91,14 +105,31 @@ class Executor:
         self._prefill = jax.jit(prefill_impl, donate_argnums=(1,),
                                 out_shardings=out_sh)
         self._sample = jax.jit(self._sample_fn)
+        self._seen_traces: Dict[str, int] = {}
+
+    def _note_traces(self, kind: str, fn) -> None:
+        """Count jit-cache growth since the last call of ``kind`` (metrics
+        enabled only; no-op when the jax version hides cache sizes)."""
+        if not obs_metrics.enabled():
+            return
+        get = getattr(fn, "_cache_size", None)
+        if not callable(get):
+            return
+        n = int(get())
+        prev = self._seen_traces.get(kind, 0)
+        if n > prev:
+            _RETRACES.inc(kind, by=n - prev)
+        self._seen_traces[kind] = n
 
     # -- entry points (mutate pool.pools in place) --------------------------
 
     def decode(self, lane_slots, toks: np.ndarray, pos: np.ndarray):
+        _LANE_WIDTHS.inc(len(lane_slots))
         prows, srows = self.pool.lane_rows(lane_slots)
         logits, self.pool.pools = self._decode(
             self.params, self.pool.pools, jnp.asarray(prows),
             jnp.asarray(srows), jnp.asarray(toks), jnp.asarray(pos))
+        self._note_traces("decode", self._decode)
         return logits
 
     def prefill(self, slot: int, toks: np.ndarray, start: int,
@@ -108,6 +139,7 @@ class Executor:
             self.params, self.pool.pools, jnp.asarray(prows),
             jnp.asarray(srows), jnp.asarray(toks), jnp.int32(start),
             jnp.asarray(last))
+        self._note_traces("prefill", self._prefill)
         return logits
 
     @staticmethod

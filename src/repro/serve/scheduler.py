@@ -27,7 +27,16 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+
 MIN_BUCKET = 8
+
+# Host-side scheduler signals (this module stays jax-free; the metrics
+# registry is pure stdlib).
+_QUEUE_DEPTH = obs_metrics.gauge(
+    "repro_serve_queue_depth", "pending requests awaiting a decode slot")
+_ADMITTED = obs_metrics.counter(
+    "repro_serve_admitted_total", "requests admitted into decode slots")
 
 
 def prompt_buckets_for(max_seq: int,
@@ -156,6 +165,7 @@ class Scheduler:
 
     def enqueue(self, req: Request):
         self._pending.append(req)
+        _QUEUE_DEPTH.set(len(self._pending))
 
     @property
     def num_active(self) -> int:
@@ -190,6 +200,9 @@ class Scheduler:
             slot.n_tokens = 0
             slot.prefill = _PrefillState()
             out.append((free, req))
+        if out:
+            _ADMITTED.inc(by=len(out))
+            _QUEUE_DEPTH.set(len(self._pending))
         return out
 
     # -- prefill ------------------------------------------------------------

@@ -37,6 +37,7 @@ class Measurement:
     us: float = float("inf")
     ok: bool = False
     error: str = ""
+    bytes: float = 0.0     # compiled bytes-accessed (repro.obs.traffic)
 
 
 @dataclass
@@ -112,7 +113,8 @@ def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                strict_tpu: bool = False,
                interpret: Optional[bool] = None,
                max_candidates: Optional[int] = None,
-               verbose: bool = False, context=None) -> TuneResult:
+               verbose: bool = False, context=None,
+               record_bytes: bool = True) -> TuneResult:
     """Sweep the pruned space for one (shape, w, backend) problem.
 
     Returns the fastest *correct* candidate plus the measured time of the
@@ -120,6 +122,11 @@ def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
     ``max_candidates`` truncates the prior-ordered space — when it bites,
     the truncation is recorded in the result's measurement count, never
     silent (the CLI logs it).
+
+    ``record_bytes`` (default on) records each correct candidate's compiled
+    bytes-accessed (:func:`repro.obs.traffic.measure_plan_bytes`) alongside
+    its wall time — the traffic column the roofline bench regresses on, and
+    the honest tiebreaker when interpret-mode wall times are noise.
 
     ``context`` (an :class:`repro.core.context.ExecContext`) supplies the
     backend, and — when it carries a mesh with the pallas backend — rewrites
@@ -146,13 +153,17 @@ def tune_shape(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
             measurements.append(Measurement(plan, ok=False, error=err))
             continue
         us = bench_plan(plan, a, b, iters=iters, interpret=interpret)
-        measurements.append(Measurement(plan, us=us, ok=True))
+        nbytes = 0.0
+        if record_bytes:
+            from repro.obs.traffic import measure_plan_bytes
+            nbytes = measure_plan_bytes(plan, a, b, interpret=interpret)
+        measurements.append(Measurement(plan, us=us, ok=True, bytes=nbytes))
         if us < winner_us:
             winner, winner_us = plan, us
         if verbose:
             print(f"    {plan.variant:7s} tiles={plan.tiles} "
                   f"int32={int(plan.combine_int32)} depth={plan.depth}: "
-                  f"{us:9.1f} us")
+                  f"{us:9.1f} us  {nbytes / 1e6:8.2f} MB")
 
     # Time the analytic default (what production runs with no table) even
     # when its stock tiles are oversized for this shape — that is exactly
