@@ -39,6 +39,20 @@ FUSED_SHAPES = (((128, 4096, 128), 1024), ((128, 8192, 128), 2048))
 FUSED_W = 12
 FUSED_REPS = 12
 
+# One fused-vs-staged family per kernel window, each at a representative
+# width: the original KMM2 window (w=12), the w = 2m-1 MM2 boundary
+# (w=15: fused_mm2's 4-accumulator single pass vs the staged MM2
+# pipeline), and depth-2 recursion (w=20: the 9-accumulator kmm4 pass vs
+# the staged two-level plane pipeline).  ``hbm_passes`` counts MXU-sized
+# array passes per side (digit products for fused; plane build + plane
+# reads + correction + combine for staged).
+# (tag, w, fused (variant, depth), staged (variant, depth), passes)
+FUSED_FAMILIES = (
+    ("", FUSED_W, ("fused", 1), ("kmm2", 1), (3, 9)),
+    ("mm2_", 15, ("fused_mm2", 1), ("mm2", 1), (4, 10)),
+    ("d2_", 20, ("fused", 2), ("kmm2", 2), (9, 15)),
+)
+
 
 def _time(fn, *args, iters=2, reps=REPS) -> float:
     fn(*args).block_until_ready()            # compile + warm
@@ -63,39 +77,47 @@ def _fused_vs_staged_rows() -> List[Dict]:
     """
     rows = []
     rng = np.random.default_rng(0)
-    lim = 2 ** (FUSED_W - 1)
-    for (m, k, n), bk in FUSED_SHAPES:
-        bm = bn = 128
-        a = jnp.asarray(rng.integers(-lim, lim, (m, k)), jnp.int32)
-        b = jnp.asarray(rng.integers(-lim, lim, (k, n)), jnp.int32)
-        fused = ExecPlan("fused", FUSED_W, backend="pallas", block_m=bm,
-                         block_n=bn, block_k=bk, depth=1)
-        staged = ExecPlan("kmm2", FUSED_W, backend="pallas", block_m=bm,
-                          block_n=bn, block_k=bk, depth=1)
-        fns = {"fused": lambda p=fused: ops.run_plan_jit(a, b, p),
-               "staged": lambda p=staged: ops.run_plan_jit(a, b, p)}
-        for f in fns.values():
-            f().block_until_ready()          # compile + warm both first
-        best = {name: float("inf") for name in fns}
-        for _ in range(FUSED_REPS):
-            for name, f in fns.items():      # interleaved repeats
-                t0 = time.perf_counter()
-                f().block_until_ready()
-                best[name] = min(best[name], (time.perf_counter() - t0) * 1e6)
-        tag = f"{m}x{k}x{n}"
-        rows.append({"bench": "walltime",
-                     "name": f"fused_kmm2_w{FUSED_W}_{tag}",
-                     "us_per_call": round(best["fused"], 1),
-                     "hbm_passes": 3, "shape": tag})
-        rows.append({"bench": "walltime",
-                     "name": f"staged_kmm2_w{FUSED_W}_{tag}",
-                     "us_per_call": round(best["staged"], 1),
-                     "hbm_passes": 9, "shape": tag})
-        rows.append({"bench": "walltime",
-                     "name": f"fused_over_staged_time_ratio_{tag}",
-                     "us_per_call": round(best["fused"] / best["staged"], 3),
-                     "shape": tag,
-                     "expect": "< 1.0 (single-pass vs staged pipeline)"})
+    for fam, w, (fv, fd), (sv, sd), (fp, sp) in FUSED_FAMILIES:
+        lim = 2 ** (w - 1)
+        for (m, k, n), bk in FUSED_SHAPES:
+            bm = bn = 128
+            a = jnp.asarray(rng.integers(-lim, lim, (m, k)), jnp.int32)
+            b = jnp.asarray(rng.integers(-lim, lim, (k, n)), jnp.int32)
+            fused = ExecPlan(fv, w, backend="pallas", block_m=bm,
+                             block_n=bn, block_k=bk, depth=fd)
+            staged = ExecPlan(sv, w, backend="pallas", block_m=bm,
+                              block_n=bn, block_k=bk, depth=sd)
+            fns = {"fused": lambda p=fused: ops.run_plan_jit(a, b, p),
+                   "staged": lambda p=staged: ops.run_plan_jit(a, b, p)}
+            for f in fns.values():
+                f().block_until_ready()      # compile + warm both first
+            best = {name: float("inf") for name in fns}
+            for _ in range(FUSED_REPS):
+                for name, f in fns.items():  # interleaved repeats
+                    t0 = time.perf_counter()
+                    f().block_until_ready()
+                    best[name] = min(best[name],
+                                     (time.perf_counter() - t0) * 1e6)
+            tag = f"{m}x{k}x{n}"
+            skind = sv if sd == 1 else f"{sv}d{sd}"
+            fkind = "kmm2" if fam == "" else \
+                ("mm2" if fv == "fused_mm2" else "kmm4")
+            rows.append({"bench": "walltime",
+                         "name": f"fused_{fkind}_w{w}_{tag}",
+                         "us_per_call": round(best["fused"], 1),
+                         "hbm_passes": fp, "shape": tag})
+            rows.append({"bench": "walltime",
+                         "name": f"staged_{skind}_w{w}_{tag}",
+                         "us_per_call": round(best["staged"], 1),
+                         "hbm_passes": sp, "shape": tag})
+            suffix = f"{fam}w{w}_{tag}" if fam else tag
+            rows.append({"bench": "walltime",
+                         "name": f"fused_over_staged_time_ratio_{suffix}",
+                         "us_per_call": round(best["fused"]
+                                              / best["staged"], 3),
+                         "shape": tag,
+                         "expect": "< 1.0 (single-pass vs staged "
+                                   "pipeline)"})
     return rows
 
 
@@ -133,6 +155,7 @@ def checks(rows):
             ratio < 1.0, f"ratio {ratio}")]
     for r in rows:
         if r["name"].startswith("fused_over_staged_time_ratio"):
-            out.append((f"fused beats staged Pallas KMM2 at {r['shape']}",
+            out.append((f"fused beats staged Pallas pipeline "
+                        f"({r['name']})",
                         r["us_per_call"] < 1.0, f"ratio {r['us_per_call']}"))
     return out

@@ -15,7 +15,13 @@ host speed.  Ratio rows (``*_ratio*``) are always compared un-normalized:
 they are already dimensionless.  The default ``--match`` set gates on the
 int_gemm rows plus the fused-over-staged *ratio* rows (interleaved-paired
 in bench_walltime, so correlated noise bursts cancel), not the raw
-fused_/staged_ microsecond rows.
+fused_/staged_ microsecond rows.  The PR-9 kernel windows ride the same
+substrings with no extra flags: the ``fused_over_staged_time_ratio_mm2_*``
+(fused_mm2 vs staged MM2, w=15) and ``..._d2_*`` (fused depth-2 vs staged
+two-level, w=20) walltime rows match ``fused_over_staged``, and the
+``roofline/traffic_{fused_mm2,staged_mm2,fused_d2,staged_d2,grouped}_*``
+traffic rows match ``roofline/`` — all gated once the committed baseline
+carries them.
 
 Serve-throughput rows are gated too: pass ``--serve-baseline
 BENCH_serve.json --serve-new /tmp/bench/BENCH_serve.json`` and the

@@ -132,7 +132,7 @@ def main() -> None:
         from repro.obs import traffic
         shapes = traffic.SMOKE_SHAPES if args.roofline_smoke \
             else traffic.DEFAULT_SHAPES
-        t_rows = traffic.traffic_rows(shapes, w=traffic.DEFAULT_W)
+        t_rows = traffic.all_traffic_rows(shapes)
         d_rows = bench_roofline.run(args.dryrun_dir)
         record("roofline", t_rows + d_rows,
                traffic.traffic_checks(t_rows) + bench_roofline.checks(d_rows))

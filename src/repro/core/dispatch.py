@@ -132,17 +132,21 @@ def schedule(widths: List[int], m: int = 8) -> List[Plan]:
 # paper's modes (executed on the Pallas kernels or the XLA digit recursion
 # depending on ``backend``); "fused" is the single-pass Pallas kernel
 # (in-kernel digit split + zero-point correction + optional dequant
-# epilogue, covering the MM1 and single-level KMM2 windows — see
-# kernels/fused_gemm.py); "xla_ref" is a single fused int32 dot_general
-# (valid only within the int32 headroom bound); "ffip" is the literal
-# free-pipeline inner-product reference (tiny shapes only).
-VARIANTS = ("mm1", "kmm2", "mm2", "fused", "xla_ref", "ffip")
+# epilogue, covering the MM1 window, single-level KMM2 at depth 1, and
+# 4-digit depth-2 KMM at depth 2 — see kernels/fused_gemm.py);
+# "fused_mm2" is the same kernel in its 4-pass conventional boundary mode
+# (valid through w <= 2m, the analytic default for the (2m-2, 2m] window
+# and a tuner alternative inside the KMM2 window); "xla_ref" is a single
+# fused int32 dot_general (valid only within the int32 headroom bound);
+# "ffip" is the literal free-pipeline inner-product reference (tiny shapes
+# only).
+VARIANTS = ("mm1", "kmm2", "mm2", "fused", "fused_mm2", "xla_ref", "ffip")
 
 _EXACT_VARIANTS = ("mm1", "xla_ref", "ffip")  # integer core, no fp32 combine
 
 # Variants whose recorded tiles reflect a real Pallas measurement (the
 # tiles-only adoption path in select_plan).
-_TILED_VARIANTS = ("mm1", "kmm2", "mm2", "fused")
+_TILED_VARIANTS = ("mm1", "kmm2", "mm2", "fused", "fused_mm2")
 
 
 @dataclass(frozen=True)
@@ -200,17 +204,19 @@ class ExecPlan:
     @property
     def digits(self) -> int:
         if self.variant == "fused":
-            return 2 if self.w > self.m else 1
+            return 2 ** self.depth      # depth 0 in the MM1 window
+        if self.variant == "fused_mm2":
+            return 2
         return 2 ** self.depth if self.variant in ("kmm2", "mm2") else 1
 
     @property
     def mode(self) -> Optional[Mode]:
         if self.variant == "fused":
             return Mode.KMM2 if self.w > self.m else Mode.MM1
+        if self.variant in ("mm2", "fused_mm2"):
+            return Mode.MM2
         if self.variant == "kmm2":
             return Mode.KMM2
-        if self.variant == "mm2":
-            return Mode.MM2
         if self.variant in ("mm1", "xla_ref"):
             return Mode.MM1
         return None
@@ -247,7 +253,8 @@ def numerics_fingerprint(plan: ExecPlan):
     int32 partials exactly and stay in the "exact" class)."""
     if plan.is_exact_int:
         return ("exact", plan.epilogue)
-    variant = "kmm2" if plan.variant == "fused" else plan.variant
+    variant = {"fused": "kmm2", "fused_mm2": "mm2"}.get(plan.variant,
+                                                        plan.variant)
     k_axes = plan.shard.k_axes if plan.shard is not None else ()
     return ("fp32", variant, plan.depth, plan.backend, plan.epilogue, k_axes)
 
@@ -259,10 +266,13 @@ def analytic_plan(w: int, m: int = 8, *, backend: str = "xla",
                   exact: bool = False) -> ExecPlan:
     """The paper's dispatch rule as an ExecPlan with default tiles.
 
-    On ``backend="pallas"`` the MM1 and single-level KMM2 windows route to
-    the fused single-pass kernel (kernels/fused_gemm.py) — numerics-identical
-    to the staged kernels (same fingerprint class), one HBM round-trip
-    instead of ~6.  MM2 and deeper recursion keep the staged variants.
+    On ``backend="pallas"`` every window through depth-2 recursion routes
+    to the fused single-pass kernel (kernels/fused_gemm.py) —
+    numerics-identical to the staged kernels (same fingerprint class), one
+    HBM round-trip instead of ~6: MM1 and single-level KMM2 as "fused", the
+    (2m-2, 2m] boundary as "fused_mm2" (4 passes), and 4-digit recursion
+    (``kmm_levels_needed(w, m) == 2``) as "fused" at depth 2 (9 passes).
+    Only depth >= 3 keeps the staged variants.
     """
     plan = select_mode(w, m)
     bm, bn, bk = DEFAULT_TILES
@@ -271,9 +281,11 @@ def analytic_plan(w: int, m: int = 8, *, backend: str = "xla",
     combine_int32 = exact
     if backend == "pallas" and (
             plan.mode is Mode.MM1
-            or (plan.mode is Mode.KMM2 and plan.recursion == 1)):
+            or (plan.mode is Mode.KMM2 and plan.recursion <= 2)):
         variant = "fused"
         combine_int32 = exact or plan.mode is Mode.MM1
+    elif backend == "pallas" and plan.mode is Mode.MM2:
+        variant = "fused_mm2"
     return ExecPlan(variant=variant, w=w, m=m, backend=backend,
                     block_m=bm, block_n=bn, block_k=bk,
                     combine_int32=combine_int32, depth=depth)

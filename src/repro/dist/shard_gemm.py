@@ -158,19 +158,29 @@ def shard_dense_gemm(fn, mesh: Mesh, spec: GemmShardSpec):
         out_specs=P(ms, ns), check_rep=False)
 
 
-def shard_grouped_gemm(fn, mesh: Mesh, spec: GemmShardSpec):
-    """shard_map a local ``(qx, qw, sx, sw) -> out`` grouped expert GEMM.
+def shard_grouped_gemm(fn, mesh: Mesh, spec: GemmShardSpec,
+                       counts: Optional[Array] = None):
+    """shard_map a local ``(qx, qw, sx, sw[, counts]) -> out`` grouped GEMM.
 
     Operands are (E, C, K) / (E, K, N) / (E, C, 1) / (E, 1, N); the expert
     dim shards over ``spec.e_axes`` so each shard launches the grouped
-    kernel over its local experts.
+    kernel over its local experts.  When ``counts`` (E, S) is given the
+    ragged per-expert row counts shard over the same expert axis and are
+    appended as a fifth operand — each shard sees exactly its local
+    experts' live counts, so sharded ragged masking equals unsharded.
+    The returned callable still takes ``(qx, qw, sx, sw)``; ``counts`` is
+    closed over here.
     """
     es = _axis_entry(spec.e_axes)
-    return shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(es, None, None), P(es, None, None),
-                  P(es, None, None), P(es, None, None)),
+    in_specs = [P(es, None, None)] * 4
+    if counts is not None:
+        in_specs.append(P(es, None))
+    f = shard_map(
+        fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=P(es, None, None), check_rep=False)
+    if counts is None:
+        return f
+    return lambda qx, qw, sx, sw: f(qx, qw, sx, sw, counts)
 
 
 def sharded_run_plan(a: Array, b: Array, *, plan: ExecPlan, mesh: Mesh,
@@ -230,9 +240,10 @@ def plan_local_bounds_ok(plan: ExecPlan, lshape: Shape, w: int,
         return False, (f"local K={k_local} > max_exact_k({w})="
                        f"{max_exact_k(w)}")
     kp = -(-k_local // plan.block_k) * plan.block_k
-    if w > m and kp > tune_space.digit_accum_k_bound(w):
-        return False, (f"local padded K={kp} > digit_accum_k_bound({w})="
-                       f"{tune_space.digit_accum_k_bound(w)}")
+    bound = tune_space.plan_accum_k_bound(plan)
+    if bound is not None and kp > bound:
+        return False, (f"local padded K={kp} > accum bound {bound} for "
+                       f"{plan.variant!r} depth={plan.depth} (w={w})")
     vmem = tune_space.vmem_footprint(plan)
     if vmem > tune_space.VMEM_BUDGET:
         return False, (f"per-shard VMEM footprint {vmem} > "

@@ -1,41 +1,54 @@
-"""Pallas TPU kernel: fused single-pass KMM2/MM1 integer GEMM.
+"""Pallas TPU kernel: fused single-pass integer GEMM (MM1/KMM2/MM2/depth-2).
 
 The paper's KMM hardware (Figs. 8-9) wins because the digit pre-adders, the
-three digit-plane multipliers and the post-adder combine live in *one*
-pipeline with no intermediate memory round-trips.  The staged Pallas path in
+digit-plane multipliers and the post-adder combine live in *one* pipeline
+with no intermediate memory round-trips.  The staged Pallas path in
 :mod:`repro.kernels.ops` approximates that with ~6 HBM passes: ``_planes``
-materializes four int8 plane arrays, ``kmm2_gemm_planes`` reads them back,
-and the Section IV-D zero-point correction plus dequant each cost another
+materializes plane arrays, ``kmm2_gemm_planes`` reads them back, and the
+Section IV-D zero-point correction plus dequant each cost another
 array-sized pass.  This kernel is the faithful mapping: ONE ``pallas_call``
 that
 
   * reads the **original** integer operands (narrowest carrier: int8 for
-    ``w <= m``, int16 for the KMM2 window) — no pre-split planes in HBM;
-  * performs the ``h``-split and low-digit centering on the VPU in-register,
-    per (bm, bk)/(bk, bn) tile (the Fig. 8 X-adder vector);
-  * runs the three digit MXU passes (C1, Cs, C0) against persistent int32
-    VMEM accumulators across the K grid — or a single pass when ``w <= m``
-    (MM1 window, no split needed);
+    ``w <= m``, int16 up to ``w <= 16``, int32 above) — no pre-split planes
+    in HBM;
+  * performs the digit split(s) and low-digit centering on the VPU
+    in-register, per (bm, bk)/(bk, bn) tile (the Fig. 8 X-adder vector);
+  * runs the mode's MXU passes against persistent int32 VMEM accumulators
+    across the K grid:
+
+      - ``mm1``  (w <= m):        1 pass, no split;
+      - ``kmm2`` (m < w <= 2m-2): 3 passes (C1, Cs, C0);
+      - ``mm2``  (2m-2 < w <= 2m): 4 passes (C1, C10, C01, C0) — the
+        conventional boundary mode, same accumulator scheme;
+      - ``kmm4`` (depth-2 KMM, 4 digits): 9 passes — the level-1 centered
+        split at ``h`` is re-split (plain, uncentered) at
+        ``h2 = ceil((h+1)/2)`` per branch {A1, As, A0}, with the nested
+        Fig. 8 pre-adders computed in-register on the VPU;
+
   * accumulates the zero-point rowsum/colsum terms in (bm, 1)/(1, bn) VMEM
     scratch across the K grid (``rowsum(Abar) = rowsum(A) - Kp*z`` needs the
     *raw* operand tiles, which the kernel already holds);
-  * applies the KMM post-adder combine **and** the Section IV-D correction
-    in the final K step, optionally followed by a dequant epilogue
-    (per-token ``sx`` row scale x per-channel ``sw`` col scale ->
+  * applies the mode's post-adder combine **and** the Section IV-D
+    correction in the final K step, optionally followed by a dequant
+    epilogue (per-token ``sx`` row scale x per-channel ``sw`` col scale ->
     fp32/bf16), so the quantized model path is 2 operand reads + 1 output
     write.
 
 Numerics are pinned to the staged path bit-for-bit (asserted across the
 pruned tune space by ``tests/test_fused_gemm.py`` / ``tests/test_tune.py``):
 the digit products and row/col sums are exact int32 regardless of tiling,
-and the fp32 combine applies the identical operation sequence
-(``c1*2^2h + (cs-c1-c0)*2^h + c0`` then ``+ (z*row + z*col + z*z*Kp)``), so
-interpret-mode CI can gate the fused kernel against the pure-jnp staged
-mirror with ``np.array_equal``.
+and the fp32 combine applies the identical operation sequence as the staged
+kernels at every level, so interpret-mode CI can gate the fused kernel
+against the pure-jnp staged mirror with ``np.array_equal``.
 
 ``fused_gemm_grouped`` adds a leading expert/group grid axis so MoE expert
 GEMMs ((E, C, K) x (E, K, N)) run as one kernel launch instead of an XLA
-recursion per expert.
+recursion per expert.  With ``counts``/``seg`` it runs *ragged*: row ``r``
+of expert ``e`` is live iff ``r % seg < counts[e, r // seg]``; dead rows are
+masked to exact zeros at the output (live rows never see the mask, so they
+stay bit-identical to the dense grouped launch), and m-blocks with no live
+row skip their MXU passes entirely.
 """
 from __future__ import annotations
 
@@ -51,6 +64,12 @@ from repro.kernels._compat import CompilerParams as _CompilerParams
 
 Array = jax.Array
 
+# Kernel modes (digit layouts).  "auto" resolves to the paper's default for
+# the width: mm1 (w <= m) or kmm2 (above).  mm2 and kmm4 are explicit
+# because they are *alternatives* inside overlapping width windows (the
+# dispatch/tuning layer owns the choice, not the kernel).
+MODES = ("mm1", "kmm2", "mm2", "kmm4")
+
 
 def _pad_tail(x: Array, mults) -> Array:
     """Zero-pad the trailing ``len(mults)`` dims of ``x`` up to multiples."""
@@ -62,15 +81,55 @@ def _pad_tail(x: Array, mults) -> Array:
     return x
 
 
-def _fused_kernel(*refs, h: int, z: int, nk: int, kp: int, split: bool,
-                  fp32_dot: bool, combine_int32: bool, dequant: bool,
-                  grouped: bool, out_dtype):
+def leaf_mag_bits(mode: str, w: int) -> int:
+    """ceil(log2) bound on the largest digit magnitude entering an MXU pass
+    (pre-adder outputs included) — the quantity that prices both the exact
+    fp32-dot window and the int32 digit-accumulator headroom.
+
+      * kmm2: |A1 + (A0 - z)| <= 2^h          (Fig. 8 pre-adder)
+      * mm2:  |A1|, |A0 - z| <= 2^(h-1)       (no pre-adder)
+      * kmm4: the level-1 branches fit h+1 signed bits; the plain level-2
+        split at h2 = ceil((h+1)/2) gives leaves |hi| <= 2^(h-h2) and
+        lo in [0, 2^h2), so the nested pre-adder is < 2^(h-h2) + 2^h2.
+    """
+    h = -(-w // 2)
+    if mode == "kmm2":
+        return h
+    if mode == "mm2":
+        return max(h - 1, 1)
+    if mode == "kmm4":
+        w1 = h + 1                       # widest branch: As = A1 + A0bar
+        h2 = -(-w1 // 2)
+        mag = (1 << max(w1 - h2 - 1, 0)) + (1 << h2)
+        return max(mag.bit_length(), 1)
+    raise ValueError(f"no digit magnitude for mode {mode!r}")
+
+
+def _fp32_dot_ok(mode: str, w: int, block_k: int) -> bool:
+    """Exact-fp32 digit products: every digit entering a dot is an integer
+    with magnitude <= 2^leaf_mag_bits, so every K-dot partial sum over a
+    block_k-deep tile is an integer of magnitude <= block_k * 2^(2*bits).
+    While that stays <= 2^24 every value is exactly representable in fp32:
+    the MXU-native fp32 pass computes the same integers the integer path
+    does, bit for bit, and the int32 cast is lossless."""
+    bits = leaf_mag_bits(mode, w)
+    return block_k <= (1 << max(24 - 2 * bits, 0))
+
+
+def _fused_kernel(*refs, mode: str, h: int, h2: int, z: int, nk: int,
+                  kp: int, seg: int, fp32_dot: bool, combine_int32: bool,
+                  dequant: bool, grouped: bool, ragged: bool, out_dtype):
+    idx = 2
+    a_ref, b_ref = refs[:2]
+    sx_ref = sw_ref = counts_ref = None
     if dequant:
-        a_ref, b_ref, sx_ref, sw_ref, out_ref = refs[:5]
-        scratch = refs[5:]
-    else:
-        a_ref, b_ref, out_ref = refs[:3]
-        scratch = refs[3:]
+        sx_ref, sw_ref = refs[idx:idx + 2]
+        idx += 2
+    if ragged:
+        counts_ref = refs[idx]
+        idx += 1
+    out_ref = refs[idx]
+    scratch = refs[idx + 1:]
     k = pl.program_id(3 if grouped else 2)
 
     def ld(ref):
@@ -81,133 +140,203 @@ def _fused_kernel(*refs, h: int, z: int, nk: int, kp: int, split: bool,
         for r in scratch:
             r[...] = jnp.zeros_like(r)
 
-    a = ld(a_ref)
-    b = ld(b_ref)
-    if split:
-        acc1_ref, accs_ref, acc0_ref, row_ref, col_ref = scratch
-        mask = (1 << h) - 1
+    live = None
+    if ragged:
+        # Ragged grouped contract: row r is live iff its within-segment
+        # rank beats the segment's live count.  The mask depends only on
+        # (group, m-block) — dead m-blocks skip their MXU passes, dead
+        # rows inside a live block are zeroed at the combine (live rows
+        # never see the mask, so they match the dense launch bit-for-bit).
+        bm = out_ref.shape[-2]
+        n_seg = counts_ref.shape[-1]
+        i = pl.program_id(1)
+        rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        seg_ids = rows // seg
+        limit = jnp.take(counts_ref[0], jnp.clip(seg_ids, 0, n_seg - 1))
+        live = (rows - seg_ids * seg < limit) & (seg_ids < n_seg)
+
+    def _dots(pairs, accs):
+        if fp32_dot:
+            # Exact fp32 digit products (see _fp32_dot_ok): this is the
+            # MXU's native number format; on CPU interpret mode it rides
+            # the fast sgemm path instead of the integer-matmul fallback.
+            hi_prec = jax.lax.Precision.HIGHEST
+            for (x, y), acc in zip(pairs, accs):
+                acc[...] += jnp.dot(x.astype(jnp.float32),
+                                    y.astype(jnp.float32),
+                                    precision=hi_prec).astype(jnp.int32)
+        else:
+            for (x, y), acc in zip(pairs, accs):
+                acc[...] += jnp.dot(x, y, preferred_element_type=jnp.int32)
+
+    def _accumulate():
+        a = ld(a_ref)
+        b = ld(b_ref)
+        if mode == "mm1":
+            (acc0_ref,) = scratch
+            acc0_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.int32)
+            return
         # VPU in-register digit split + centering (ops._planes, minus the
-        # four HBM plane arrays).  Digits stay in the int16 operand carrier:
-        # their values fit s8 (w <= 16), so the MXU products are the same
-        # exact int32 the staged s8-plane kernel computes, without an extra
-        # narrowing cast per tile.
+        # HBM plane arrays).  Digits stay in the operand carrier: their
+        # values fit it with room to spare, so the MXU products are the
+        # same exact int32 the staged plane kernels compute, without an
+        # extra narrowing cast per tile.
+        mask = (1 << h) - 1
         a1 = jnp.right_shift(a, h)
         a0 = jnp.bitwise_and(a, mask) - z
         b1 = jnp.right_shift(b, h)
         b0 = jnp.bitwise_and(b, mask) - z
-        # Fig. 8 pre-adders (s8-safe within the KMM2 window w <= 2m-2) and
-        # the three sub-MXU passes with persistent int32 accumulation.
-        if fp32_dot:
-            # Exact fp32 digit products (see fused_gemm: digits are
-            # integers <= 2^h, so with block_k <= 2^(24-2h) every partial
-            # sum is an integer below 2^24 — fp32 arithmetic is exact and
-            # the int32 cast is lossless).  This is the MXU's native
-            # number format; on CPU interpret mode it rides the fast
-            # sgemm path instead of the integer-matmul fallback.
-            a1f, a0f = a1.astype(jnp.float32), a0.astype(jnp.float32)
-            b1f, b0f = b1.astype(jnp.float32), b0.astype(jnp.float32)
-            hi = jax.lax.Precision.HIGHEST
-            acc1_ref[...] += jnp.dot(a1f, b1f,
-                                     precision=hi).astype(jnp.int32)
-            accs_ref[...] += jnp.dot(a1f + a0f, b1f + b0f,
-                                     precision=hi).astype(jnp.int32)
-            acc0_ref[...] += jnp.dot(a0f, b0f,
-                                     precision=hi).astype(jnp.int32)
-        else:
-            acc1_ref[...] += jnp.dot(a1, b1,
-                                     preferred_element_type=jnp.int32)
-            accs_ref[...] += jnp.dot(a1 + a0, b1 + b0,
-                                     preferred_element_type=jnp.int32)
-            acc0_ref[...] += jnp.dot(a0, b0,
-                                     preferred_element_type=jnp.int32)
+        if mode == "kmm2":
+            # Fig. 8 pre-adders + the three sub-MXU passes.
+            pairs = [(a1, b1), (a1 + a0, b1 + b0), (a0, b0)]
+        elif mode == "mm2":
+            # Conventional 4-product boundary mode (no pre-adder, so the
+            # digit planes stay within s8 up to w = 2m).
+            pairs = [(a1, b1), (a1, b0), (a0, b1), (a0, b0)]
+        else:  # kmm4: nested Fig. 8 — re-split each branch at h2, 9 passes
+            mask2 = (1 << h2) - 1
+            pairs = []
+            for av, bv in ((a1, b1), (a1 + a0, b1 + b0), (a0, b0)):
+                av1 = jnp.right_shift(av, h2)
+                av0 = jnp.bitwise_and(av, mask2)
+                bv1 = jnp.right_shift(bv, h2)
+                bv0 = jnp.bitwise_and(bv, mask2)
+                pairs += [(av1, bv1), (av1 + av0, bv1 + bv0), (av0, bv0)]
+        row_ref, col_ref = scratch[-2], scratch[-1]
+        _dots(pairs, scratch[:-2])
         # Zero-point sums accumulated across the K grid: rowsum(Abar) =
         # rowsum(A) - Kp*z, so the raw tiles already in registers suffice.
         row_ref[...] += jnp.sum(a, axis=1, keepdims=True, dtype=jnp.int32)
         col_ref[...] += jnp.sum(b, axis=0, keepdims=True, dtype=jnp.int32)
+
+    if ragged:
+        pl.when(jnp.any(live))(_accumulate)
     else:
-        (acc0_ref,) = scratch
-        acc0_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.int32)
+        _accumulate()
 
     @pl.when(k == nk - 1)
     def _combine():
-        if split:
-            c1 = acc1_ref[...]
-            cs = accs_ref[...]
-            c0 = acc0_ref[...]
-            row = row_ref[...] - jnp.int32(kp * z)
-            col = col_ref[...] - jnp.int32(kp * z)
+        if mode == "mm1":
+            val = scratch[0][...]
+        else:
+            row = scratch[-2][...] - jnp.int32(kp * z)
+            col = scratch[-1][...] - jnp.int32(kp * z)
+            if mode == "kmm2":
+                core = _combine_kmm2(scratch[0][...], scratch[1][...],
+                                     scratch[2][...], h, combine_int32)
+            elif mode == "mm2":
+                core = _combine_mm2(scratch[0][...], scratch[1][...],
+                                    scratch[2][...], scratch[3][...],
+                                    h, combine_int32)
+            else:  # kmm4: level-2 combine per branch, then level-1
+                c11 = _combine_kmm2(scratch[0][...], scratch[1][...],
+                                    scratch[2][...], h2, combine_int32)
+                css = _combine_kmm2(scratch[3][...], scratch[4][...],
+                                    scratch[5][...], h2, combine_int32)
+                c00 = _combine_kmm2(scratch[6][...], scratch[7][...],
+                                    scratch[8][...], h2, combine_int32)
+                core = _combine_kmm2_wide(c11, css, c00, h, combine_int32)
             if combine_int32:
-                core = (c1 << (2 * h)) + ((cs - c1 - c0) << h) + c0
                 val = core + (z * row + z * col + jnp.int32(z * z * kp))
             else:
-                c1f = c1.astype(jnp.float32)
-                c0f = c0.astype(jnp.float32)
-                mid = cs.astype(jnp.float32) - c1f - c0f
-                core = c1f * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c0f
                 corr = (z * row.astype(jnp.float32)
                         + z * col.astype(jnp.float32)
                         + float(z) * float(z) * float(kp))
                 val = core + corr
-        else:
-            val = acc0_ref[...]
         if dequant:
             val = val.astype(jnp.float32) * (ld(sx_ref) * ld(sw_ref))
         val = val.astype(out_dtype)
+        if ragged:
+            val = jnp.where(live, val, jnp.zeros_like(val))
         if grouped:
             out_ref[0] = val
         else:
             out_ref[...] = val
 
 
-def _fp32_dot_ok(h: int, block_k: int) -> bool:
-    """Exact-fp32 digit products: digits (incl. the pre-adder outputs) are
-    integers with magnitude <= 2^h, so every K-dot partial sum over a
-    block_k-deep tile is an integer of magnitude <= block_k * 2^(2h).
-    While that stays <= 2^24 every value is exactly representable in fp32:
-    the MXU-native fp32 pass computes the same integers the s8 path does,
-    bit for bit, and the int32 cast is lossless."""
-    return block_k <= (1 << max(24 - 2 * h, 0))
+def _combine_kmm2(c1, cs, c0, h: int, combine_int32: bool):
+    """KMM post-adder (Fig. 9): C = C1<<2h + (Cs-C1-C0)<<h + C0 — the exact
+    operation sequence of kmm2_gemm_planes / ref_kmm2_planes."""
+    if combine_int32:
+        return (c1 << (2 * h)) + ((cs - c1 - c0) << h) + c0
+    c1f = c1.astype(jnp.float32)
+    c0f = c0.astype(jnp.float32)
+    mid = cs.astype(jnp.float32) - c1f - c0f
+    return c1f * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c0f
 
 
-def _resolve(w: int, m: int, dequant: bool, combine_int32: bool, out_dtype,
-             interpret: Optional[bool]):
+def _combine_kmm2_wide(c1, cs, c0, h: int, combine_int32: bool):
+    """Level-1 KMM combine on already-combined (fp32/int32) branch products
+    — same sequence as _combine_kmm2, minus the int32->fp32 casts."""
+    if combine_int32:
+        return (c1 << (2 * h)) + ((cs - c1 - c0) << h) + c0
+    mid = cs - c1 - c0
+    return c1 * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c0
+
+
+def _combine_mm2(c1, c10, c01, c0, h: int, combine_int32: bool):
+    """Conventional 4-product combine — the exact operation sequence of
+    mm2_gemm_planes / ref_mm2_planes (c10/c01 summed as fp32, not int)."""
+    if combine_int32:
+        return (c1 << (2 * h)) + ((c10 + c01) << h) + c0
+    mid = c10.astype(jnp.float32) + c01.astype(jnp.float32)
+    return (c1.astype(jnp.float32) * (2.0 ** (2 * h)) + mid * (2.0 ** h)
+            + c0.astype(jnp.float32))
+
+
+_N_ACC = {"mm1": 1, "kmm2": 3, "mm2": 4, "kmm4": 9}
+
+
+def _resolve(w: int, m: int, mode: str, dequant: bool, combine_int32: bool,
+             out_dtype, interpret: Optional[bool]):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    split = w > m
+    if mode == "auto":
+        mode = "mm1" if w <= m else "kmm2"
+    if mode not in MODES:
+        raise ValueError(f"unknown fused mode {mode!r}; choices {MODES}")
+    split = mode != "mm1"
     h = -(-w // 2) if split else 0
+    h2 = -(-(h + 1) // 2) if mode == "kmm4" else 0
     z = (1 << (h - 1)) if split else 0
-    # Narrowest carrier covering the fused windows: int8 for w <= m (one
-    # MXU pass, no split), int16 for the KMM2 window (w <= 2m - 2 = 14) —
-    # half the HBM operand traffic of the int32 carrier the staged wrapper
-    # hauls through its plane-materialization passes.
-    carrier = jnp.int16 if split else jnp.int8
+    # Narrowest carrier covering the window: int8 for w <= m (one MXU pass,
+    # no split), int16 through w = 16 (KMM2/MM2 windows), int32 only for
+    # the deep-recursion widths — always at most half the staged wrapper's
+    # int32 plane-materialization traffic.
+    carrier = (jnp.int8 if not split else
+               jnp.int16 if w <= 16 else jnp.int32)
     if out_dtype is None:
         out_dtype = (jnp.float32 if dequant else
                      jnp.int32 if (combine_int32 or not split) else
                      jnp.float32)
-    return split, h, z, carrier, jnp.dtype(out_dtype), interpret
+    return mode, h, h2, z, carrier, jnp.dtype(out_dtype), interpret
 
 
-def _scratch_shapes(split: bool, block_m: int, block_n: int):
-    if not split:
-        return [pltpu.VMEM((block_m, block_n), jnp.int32)]
-    return [pltpu.VMEM((block_m, block_n), jnp.int32)] * 3 + [
-        pltpu.VMEM((block_m, 1), jnp.int32),
-        pltpu.VMEM((1, block_n), jnp.int32),
-    ]
+def _scratch_shapes(mode: str, block_m: int, block_n: int):
+    accs = [pltpu.VMEM((block_m, block_n), jnp.int32)] * _N_ACC[mode]
+    if mode == "mm1":
+        return accs
+    return accs + [pltpu.VMEM((block_m, 1), jnp.int32),
+                   pltpu.VMEM((1, block_n), jnp.int32)]
 
 
-def _fused_call(a, b, sx, sw, *, grouped: bool, w: int, m: int,
-                block_m: int, block_n: int, block_k: int,
-                combine_int32: bool, out_dtype, interpret) -> Array:
+def _fused_call(a, b, sx, sw, counts, *, grouped: bool, w: int, m: int,
+                mode: str, seg: Optional[int], block_m: int, block_n: int,
+                block_k: int, combine_int32: bool, out_dtype,
+                interpret) -> Array:
     """Shared pallas_call builder; ``grouped`` adds the leading expert grid
     axis (every BlockSpec gains a size-1 leading block on the group index).
     """
     if (sx is None) != (sw is None):
         raise ValueError("pass both sx and sw for the dequant epilogue")
     dequant = sx is not None
-    split, h, z, carrier, out_dtype, interpret = _resolve(
-        w, m, dequant, combine_int32, out_dtype, interpret)
+    ragged = counts is not None
+    if ragged and not grouped:
+        raise ValueError("ragged counts require the grouped kernel")
+    if ragged and (seg is None or seg <= 0):
+        raise ValueError("ragged counts need a positive static seg")
+    mode, h, h2, z, carrier, out_dtype, interpret = _resolve(
+        w, m, mode, dequant, combine_int32, out_dtype, interpret)
     lead = a.shape[:-2]                  # () dense, (E,) grouped
     m_dim, k_dim = a.shape[-2:]
     n_dim = b.shape[-1]
@@ -226,10 +355,11 @@ def _fused_call(a, b, sx, sw, *, grouped: bool, w: int, m: int,
         return pl.BlockSpec(block, index_map)
 
     kernel = functools.partial(
-        _fused_kernel, h=h, z=z, nk=body[2], kp=kp, split=split,
-        fp32_dot=split and _fp32_dot_ok(h, block_k),
+        _fused_kernel, mode=mode, h=h, h2=h2, z=z, nk=body[2], kp=kp,
+        seg=seg or 0, fp32_dot=(mode != "mm1"
+                                and _fp32_dot_ok(mode, w, block_k)),
         combine_int32=combine_int32, dequant=dequant, grouped=grouped,
-        out_dtype=out_dtype)
+        ragged=ragged, out_dtype=out_dtype)
     in_specs = [spec((block_m, block_k), lambda i, j, kk: (i, kk)),
                 spec((block_k, block_n), lambda i, j, kk: (kk, j))]
     operands = [a, b]
@@ -238,13 +368,17 @@ def _fused_call(a, b, sx, sw, *, grouped: bool, w: int, m: int,
                      _pad_tail(sw.astype(jnp.float32), (1, block_n))]
         in_specs += [spec((block_m, 1), lambda i, j, kk: (i, 0)),
                      spec((1, block_n), lambda i, j, kk: (0, j))]
+    if ragged:
+        n_seg = counts.shape[-1]
+        operands.append(counts.astype(jnp.int32))
+        in_specs.append(spec((n_seg,), lambda i, j, kk: (0,)))
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=spec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct(lead + (mp, np_), out_dtype),
-        scratch_shapes=_scratch_shapes(split, block_m, block_n),
+        scratch_shapes=_scratch_shapes(mode, block_m, block_n),
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel",) * (len(grid) - 1)
             + ("arbitrary",)),
@@ -255,7 +389,7 @@ def _fused_call(a, b, sx, sw, *, grouped: bool, w: int, m: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("w", "m", "block_m", "block_n", "block_k",
+    static_argnames=("w", "m", "mode", "block_m", "block_n", "block_k",
                      "combine_int32", "out_dtype", "interpret"),
 )
 def fused_gemm(
@@ -263,6 +397,7 @@ def fused_gemm(
     sw: Optional[Array] = None, *,
     w: int,
     m: int = 8,
+    mode: str = "auto",
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 256,
@@ -275,9 +410,12 @@ def fused_gemm(
     ``a``/``b`` hold signed ``w``-bit values in any integer dtype; the
     wrapper zero-pads to tile multiples (padding commutes with the in-kernel
     correction: split(0) = (0, -z) and the K term uses padded K) and slices
-    the result back.  ``w <= m`` runs the single-pass MM1 window (core is
-    inherently exact int32, ``combine_int32`` is ignored); ``m < w <= 2m-2``
-    runs the 3-pass KMM2 window.
+    the result back.  ``mode`` picks the digit layout: ``"auto"`` resolves
+    the paper's default (``w <= m`` -> single-pass MM1, above -> 3-pass
+    KMM2); ``"mm2"`` runs the conventional 4-pass boundary mode (valid
+    through ``w <= 2m``); ``"kmm4"`` runs depth-2 KMM (4 digits, 9 passes)
+    whose per-leaf int32 accumulators stay exact to far deeper K than the
+    single-level split (see ``tune.space.plan_accum_k_bound``).
 
     With ``sx`` (M, 1) / ``sw`` (1, N) fp32 scales the dequant epilogue
     ``out = acc * (sx * sw)`` runs in the same kernel (fp32, or ``out_dtype``
@@ -285,22 +423,24 @@ def fused_gemm(
     post-multiply.  Without scales the output is int32 for exact plans,
     fp32 otherwise.
     """
-    return _fused_call(a, b, sx, sw, grouped=False, w=w, m=m,
-                       block_m=block_m, block_n=block_n, block_k=block_k,
-                       combine_int32=combine_int32, out_dtype=out_dtype,
-                       interpret=interpret)
+    return _fused_call(a, b, sx, sw, None, grouped=False, w=w, m=m,
+                       mode=mode, seg=None, block_m=block_m, block_n=block_n,
+                       block_k=block_k, combine_int32=combine_int32,
+                       out_dtype=out_dtype, interpret=interpret)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("w", "m", "block_m", "block_n", "block_k",
-                     "combine_int32", "out_dtype", "interpret"),
+    static_argnames=("w", "m", "mode", "seg", "block_m", "block_n",
+                     "block_k", "combine_int32", "out_dtype", "interpret"),
 )
 def fused_gemm_grouped(
     a: Array, b: Array, sx: Optional[Array] = None,
-    sw: Optional[Array] = None, *,
+    sw: Optional[Array] = None, counts: Optional[Array] = None, *,
     w: int,
     m: int = 8,
+    mode: str = "auto",
+    seg: Optional[int] = None,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 256,
@@ -315,8 +455,17 @@ def fused_gemm_grouped(
     per-expert dispatch).  Scales, when given, are (E, C, 1) and (E, 1, N).
     Per-group results are bit-identical to E independent ``fused_gemm``
     calls with the same tiles.
+
+    ``counts`` (E, S) int32 with static ``seg`` makes the launch *ragged*
+    (MegaBlocks-style): the C rows of expert ``e`` are read as S segments of
+    ``seg`` rows each, of which only the first ``counts[e, s]`` are live.
+    Dead rows come out as exact zeros; live rows are bit-identical to the
+    dense launch with the same tiles (the mask touches outputs, never the
+    accumulation), and m-blocks with no live row skip their MXU passes —
+    the capacity-bucketed MoE dispatch (models/moe.py) passes S = batch,
+    seg = capacity.  A zero-count segment (zero-token expert) is all-dead.
     """
-    return _fused_call(a, b, sx, sw, grouped=True, w=w, m=m,
-                       block_m=block_m, block_n=block_n, block_k=block_k,
-                       combine_int32=combine_int32, out_dtype=out_dtype,
-                       interpret=interpret)
+    return _fused_call(a, b, sx, sw, counts, grouped=True, w=w, m=m,
+                       mode=mode, seg=seg, block_m=block_m, block_n=block_n,
+                       block_k=block_k, combine_int32=combine_int32,
+                       out_dtype=out_dtype, interpret=interpret)

@@ -181,16 +181,20 @@ def _run_plan_impl(a: Array, b: Array, *, plan: ExecPlan,
         return ref_int_gemm(a, b)
     if plan.variant == "ffip":
         return ffip_gemm_literal(a, b)
-    if plan.variant == "fused":
+    if plan.variant in ("fused", "fused_mm2"):
         if use_ref_kernels:
             # The staged pure-jnp mirror IS the fused kernel's oracle: the
-            # fused plan's mode/tiles drive the identical padding +
-            # zero-point-correction wrapper below.
+            # fused plan's mode/depth/tiles drive the identical padding +
+            # zero-point-correction wrapper below (incl. the staged depth-2
+            # branch and the MM2 plane mirror).
             return _int_gemm_pallas(a, b, plan=plan, interpret=interpret,
                                     use_ref_kernels=True)
         bm, bn, bk = plan.tiles
-        return fused_gemm(a, b, w=plan.w, m=plan.m, block_m=bm, block_n=bn,
-                          block_k=bk, combine_int32=plan.combine_int32,
+        mode = ("mm2" if plan.variant == "fused_mm2" else
+                "kmm4" if plan.depth == 2 else "auto")
+        return fused_gemm(a, b, w=plan.w, m=plan.m, mode=mode, block_m=bm,
+                          block_n=bn, block_k=bk,
+                          combine_int32=plan.combine_int32,
                           interpret=interpret)
     if plan.backend == "xla":
         return _int_gemm_xla(a, b, plan=plan)
@@ -242,22 +246,30 @@ def _int_gemm_pallas(a: Array, b: Array, *, plan: ExecPlan,
                            block_m=block_m, block_n=block_n, block_k=block_k,
                            interpret=interpret)
         return out[:m_dim, :n_dim]
-    if plan.depth > 1:
-        raise NotImplementedError(
-            "pallas backend implements single-level KMM2/MM2 (w <= 16); "
-            "use backend='xla' for deeper recursion")
     h = -(-plan.w // 2)
-    a1, a0, z = _planes(a, h)
-    b1, b0, _ = _planes(b, h)
-    if use_ref_kernels:
-        ref = ref_kmm2_planes if plan.mode is Mode.KMM2 else ref_mm2_planes
-        core = ref(a1, a0, b1, b0, h=h, combine_int32=exact)
+    z = 1 << (h - 1)
+    if plan.depth == 2 and plan.mode is Mode.KMM2:
+        core = _kmm4_core(a, b, h=h, z=z, exact=exact, tiles=plan.tiles,
+                          interpret=interpret,
+                          use_ref_kernels=use_ref_kernels)
+    elif plan.depth > 1:
+        raise NotImplementedError(
+            "pallas backend implements KMM recursion up to depth 2 "
+            "(plus single-level MM2); use backend='xla' for deeper "
+            "recursion")
     else:
-        kernel = kmm2_gemm_planes if plan.mode is Mode.KMM2 \
-            else mm2_gemm_planes
-        core = kernel(a1, a0, b1, b0, h=h, block_m=block_m, block_n=block_n,
-                      block_k=block_k, combine_int32=exact,
-                      interpret=interpret)
+        a1, a0, _ = _planes(a, h)
+        b1, b0, _ = _planes(b, h)
+        if use_ref_kernels:
+            ref = ref_kmm2_planes if plan.mode is Mode.KMM2 \
+                else ref_mm2_planes
+            core = ref(a1, a0, b1, b0, h=h, combine_int32=exact)
+        else:
+            kernel = kmm2_gemm_planes if plan.mode is Mode.KMM2 \
+                else mm2_gemm_planes
+            core = kernel(a1, a0, b1, b0, h=h, block_m=block_m,
+                          block_n=block_n, block_k=block_k,
+                          combine_int32=exact, interpret=interpret)
     # Zero-point adjuster (paper Section IV-D / prior work [6]).  The digit
     # identity abar = a - z (elementwise, padded zeros included) gives the
     # correction sums directly from the padded operands — no abar/bbar
@@ -275,6 +287,50 @@ def _int_gemm_pallas(a: Array, b: Array, *, plan: ExecPlan,
                 + float(z) * float(z) * float(kp))
         out = core + corr
     return out[:m_dim, :n_dim]
+
+
+def _kmm4_core(a: Array, b: Array, *, h: int, z: int, exact: bool, tiles,
+               interpret: Optional[bool], use_ref_kernels: bool) -> Array:
+    """Staged depth-2 KMM core on padded int32 operands: three branch KMM2
+    plane launches at the level-2 split + the level-1 combine in jnp.
+
+    The level-1 centered split at ``h`` yields branches {A1, A1+A0bar,
+    A0bar} (each fits h+1 signed bits); each branch is re-split *plain*
+    (uncentered — exact in two's complement, so no per-branch zero-point
+    correction) at ``h2 = ceil((h+1)/2)`` into int16 planes that the
+    single-level KMM2 kernel consumes unchanged.  Operation sequences match
+    the fused kmm4 kernel level for level, so fp32 combines are
+    bit-identical; the caller applies the one level-1 zero-point
+    correction.
+    """
+    block_m, block_n, block_k = tiles
+    mask = (1 << h) - 1
+    a1 = jnp.right_shift(a, h)
+    a0 = jnp.bitwise_and(a, mask) - z
+    b1 = jnp.right_shift(b, h)
+    b0 = jnp.bitwise_and(b, mask) - z
+    h2 = -(-(h + 1) // 2)
+    mask2 = (1 << h2) - 1
+
+    def branch(av, bv):
+        av1 = jnp.right_shift(av, h2).astype(jnp.int16)
+        av0 = jnp.bitwise_and(av, mask2).astype(jnp.int16)
+        bv1 = jnp.right_shift(bv, h2).astype(jnp.int16)
+        bv0 = jnp.bitwise_and(bv, mask2).astype(jnp.int16)
+        if use_ref_kernels:
+            return ref_kmm2_planes(av1, av0, bv1, bv0, h=h2,
+                                   combine_int32=exact)
+        return kmm2_gemm_planes(av1, av0, bv1, bv0, h=h2, block_m=block_m,
+                                block_n=block_n, block_k=block_k,
+                                combine_int32=exact, interpret=interpret)
+
+    c11 = branch(a1, b1)
+    css = branch(a1 + a0, b1 + b0)
+    c00 = branch(a0, b0)
+    if exact:
+        return (c11 << (2 * h)) + ((css - c11 - c00) << h) + c00
+    mid = css - c11 - c00
+    return c11 * (2.0 ** (2 * h)) + mid * (2.0 ** h) + c00
 
 
 @functools.partial(jax.jit, static_argnames=("w", "m", "backend", "exact"))

@@ -8,20 +8,47 @@ inserts the EP all-to-all when it resharded the (E, B*C, d) buffer.
 
 Capacity is per sequence (C = S*top_k*factor/E, floor 8, rounded to 8);
 overflow drops ride the residual.  Expert GEMMs run through the quantized
-KMM path (`quantized_matmul_batched`) like every other matmul.
+KMM path (`quantized_matmul_batched`) like every other matmul — and the
+dispatch is *ragged*: the per-(batch, expert) live token counts computed
+during the sort ride along as a traced (E, B) operand with ``seg = cap``,
+so the fused grouped kernel masks the zero-padded capacity tail exactly
+and skips fully-dead m-blocks instead of multiplying zeros.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.quant.qmatmul import maybe_quantized_batched, maybe_quantized_matmul
 from repro.models.layers import _act
 
 Array = jax.Array
 Params = Dict[str, Array]
+
+# Dispatch observability: tokens routed per (expert slot occupancy) and
+# capacity-overflow drops.  Observed via jax.debug.callback only when the
+# metrics layer is enabled at trace time — zero overhead otherwise.
+_TOKENS_PER_EXPERT = obs_metrics.histogram(
+    "repro_moe_tokens_per_expert",
+    "live (post-capacity) tokens per expert per dispatch, by layer",
+    labels=("layer",),
+    buckets=(0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
+             512.0, 1024.0))
+_DROPPED_TOKENS = obs_metrics.counter(
+    "repro_moe_dropped_tokens_total",
+    "token->expert assignments dropped by the capacity bound, by layer",
+    labels=("layer",))
+
+
+def _observe_dispatch(name: str, live_counts, dropped) -> None:
+    for c in np.asarray(live_counts).reshape(-1):
+        _TOKENS_PER_EXPERT.observe(float(c), name)
+    _DROPPED_TOKENS.inc(name, by=float(np.asarray(dropped)))
 
 
 def moe_init(key, cfg, dtype) -> Params:
@@ -56,7 +83,7 @@ def moe_apply(p: Params, x: Array, cfg, quant, name: str) -> Tuple[Array, Array]
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (B, S, E)
 
     def dispatch_one(xf, pr):
-        """xf: (S, d); pr: (S, E) -> buf (E, C, d) + combine aux."""
+        """xf: (S, d); pr: (S, E) -> buf (E, C, d), live counts + aux."""
         gate_vals, expert_ids = jax.lax.top_k(pr, k)              # (S, k)
         gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
                                          1e-9)
@@ -67,24 +94,44 @@ def moe_apply(p: Params, x: Array, cfg, quant, name: str) -> Tuple[Array, Array]
         se = flat_e[order]
         st = flat_t[order]
         sg = flat_g[order]
-        group_start = jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32))
+        bounds = jnp.searchsorted(se, jnp.arange(e + 1, dtype=jnp.int32))
+        group_start = bounds[:-1]
+        sizes = (bounds[1:] - bounds[:-1]).astype(jnp.int32)      # (E,)
+        live = jnp.minimum(sizes, cap)                            # (E,)
         rank = jnp.arange(s * k, dtype=jnp.int32) - group_start[se]
         keep = rank < cap
         slot = jnp.where(keep, se * cap + rank, e * cap)
         buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].set(xf[st])
-        return buf[:-1].reshape(e, cap, d), (slot, st, sg, keep, expert_ids)
+        return (buf[:-1].reshape(e, cap, d), live,
+                (slot, st, sg, keep, expert_ids))
 
-    buf, aux_info = jax.vmap(dispatch_one)(x, probs)              # (B,E,C,d)
+    buf, live, aux_info = jax.vmap(dispatch_one)(x, probs)        # (B,E,C,d)
+
+    # Ragged grouped-GEMM counts: batch b occupies segment b of each
+    # expert's folded (B*C) row range, so transposing the vmapped (B, E)
+    # live counts to (E, B) with seg = cap names exactly the rows the
+    # dispatch scatter filled.  Rows past counts[e, b] are zero padding the
+    # fused kernel's ragged contract masks (and skips when a whole m-block
+    # is dead).
+    counts = jnp.transpose(live).astype(jnp.int32)                # (E, B)
+    if obs_metrics.enabled():
+        # kept assignments = sum of per-expert live counts; the rest hit
+        # the capacity bound and ride the residual.
+        dropped = b * s * k - jnp.sum(live)
+        jax.debug.callback(partial(_observe_dispatch, name), live, dropped)
 
     # Expert GEMMs: fold batch into capacity so EP sees one (E, B*C, d) GEMM.
     xe = jnp.moveaxis(buf, 0, 1).reshape(e, b * cap, d)
-    up = maybe_quantized_batched(xe, p["wi"], quant, f"{name}.wi")
+    up = maybe_quantized_batched(xe, p["wi"], quant, f"{name}.wi",
+                                 counts=counts, seg=cap)
     if cfg.glu:
-        gate = maybe_quantized_batched(xe, p["wg"], quant, f"{name}.wg")
+        gate = maybe_quantized_batched(xe, p["wg"], quant, f"{name}.wg",
+                                       counts=counts, seg=cap)
         h = _act(gate, cfg.act) * up
     else:
         h = _act(up, cfg.act)
-    out_e = maybe_quantized_batched(h, p["wo"], quant, f"{name}.wo")
+    out_e = maybe_quantized_batched(h, p["wo"], quant, f"{name}.wo",
+                                    counts=counts, seg=cap)
     out_e = jnp.moveaxis(out_e.reshape(e, b, cap, d), 1, 0)       # (B,E,C,d)
 
     def combine_one(oe, aux):

@@ -59,29 +59,60 @@ CONSISTENCY_MAX = 2.0
 
 TRAFFIC_KINDS = ("fused", "staged", "xla")
 
+# The PR-9 kernel windows, each measured at a representative width:
+# fused_mm2 vs the staged MM2 pipeline at w = 15 (the 2m-1 boundary),
+# fused depth-2 (kmm4) vs staged kmm2-depth-2 at w = 20, and the ragged
+# grouped expert launch at the default width.  Each (fused, staged) pair
+# shares a width so the bytes ratio is apples-to-apples.
+EXTENDED_KINDS: Tuple[Tuple[str, int], ...] = (
+    ("fused_mm2", 15), ("staged_mm2", 15),
+    ("fused_d2", 20), ("staged_d2", 20))
+FUSED_PAIRS = (("fused", "staged"), ("fused_mm2", "staged_mm2"),
+               ("fused_d2", "staged_d2"))
+GROUPED_W = 12
+GROUPED_EXPERTS = 4
+
+_FUSED_KINDS = ("fused", "fused_mm2", "fused_d2")
+_STAGED_KINDS = ("staged", "staged_mm2", "staged_d2")
+
 
 def _pad(dim: int, block: int) -> int:
     return -(-dim // block) * block
 
 
+def _carrier_bytes(w: int, m: int) -> int:
+    """Per-element bytes of the fused kernel's raw operand carrier."""
+    return 1 if w <= m else (2 if w <= 16 else 4)
+
+
 def analytic_bytes(kind: str, shape: Shape, *, w: int = DEFAULT_W,
-                   m: int = 8, tiles: Tuple[int, int, int] = None) -> float:
+                   m: int = 8, tiles: Tuple[int, int, int] = None,
+                   n_experts: int = 1) -> float:
     """Analytic HBM bytes of one GEMM path (the cost_prior traffic terms,
     priced in bytes).  ``tiles`` = (bm, bn, bk); required for the Pallas
-    paths (grid reuse factors), ignored for ``xla``."""
+    paths (grid reuse factors), ignored for ``xla``.  ``grouped`` prices
+    ``n_experts`` independent fused launches plus the ragged counts read."""
     M, K, N = shape
     if kind == "xla":
         return 4.0 * (M * K + K * N) + 4.0 * M * N
     bm, bn, bk = tiles
     Mp, Np, Kp = _pad(M, bm), _pad(N, bn), _pad(K, bk)
     ra, rb = Np // bn, Mp // bm         # reuse of A-tiles / B-tiles
-    if kind == "fused":
-        opd = 1 if w <= m else 2        # s8 carrier in the MM1 window, s16 up
+    if kind in _FUSED_KINDS:
+        opd = _carrier_bytes(w, m)
         return opd * (Mp * Kp * ra + Kp * Np * rb) + 4.0 * Mp * Np
-    if kind == "staged":
+    if kind == "grouped":
+        opd = _carrier_bytes(w, m)
+        per = opd * (Mp * Kp * ra + Kp * Np * rb) + 4.0 * Mp * Np
+        return n_experts * per + 4.0 * n_experts  # + (E, S) int32 counts
+    if kind in _STAGED_KINDS:
+        # Depth 2 stages two levels of digit planes (level-1 split feeds
+        # three level-2 plane GEMM branches): scale the plane write/read
+        # terms by digits // 2, the same asymmetry cost_prior prices.
+        lv = 2.0 if kind == "staged_d2" else 1.0
         return (4.0 * (M * K + K * N)           # plane build reads (int32)
-                + 2.0 * (Mp * Kp + Kp * Np)     # 4 s8 digit-plane writes
-                + 2.0 * (Mp * Kp * ra + Kp * Np * rb)  # kernel plane reads
+                + lv * 2.0 * (Mp * Kp + Kp * Np)  # digit-plane writes
+                + lv * 2.0 * (Mp * Kp * ra + Kp * Np * rb)  # plane reads
                 + 4.0 * (M * K + K * N)         # correction rowsum/colsum
                 + 3.0 * 4.0 * Mp * Np)          # core + corr + combine out
     raise ValueError(f"unknown traffic kind {kind!r}")
@@ -131,13 +162,20 @@ def _plan_for(kind: str, w: int, m: int,
               tiles: Tuple[int, int, int]):
     from repro.core.dispatch import ExecPlan, analytic_plan
     bm, bn, bk = tiles
+    kw = dict(backend="pallas", block_m=bm, block_n=bn, block_k=bk)
     if kind == "fused":
-        return ExecPlan("fused", w, m, backend="pallas", block_m=bm,
-                        block_n=bn, block_k=bk,
-                        combine_int32=w <= m, depth=0 if w <= m else 1)
+        return ExecPlan("fused", w, m, combine_int32=w <= m,
+                        depth=0 if w <= m else 1, **kw)
+    if kind == "fused_mm2":
+        return ExecPlan("fused_mm2", w, m, depth=1, **kw)
+    if kind == "fused_d2":
+        return ExecPlan("fused", w, m, depth=2, **kw)
     if kind == "staged":
-        return ExecPlan("kmm2", w, m, backend="pallas", block_m=bm,
-                        block_n=bn, block_k=bk, depth=1)
+        return ExecPlan("kmm2", w, m, depth=1, **kw)
+    if kind == "staged_mm2":
+        return ExecPlan("mm2", w, m, depth=1, **kw)
+    if kind == "staged_d2":
+        return ExecPlan("kmm2", w, m, depth=2, **kw)
     if kind == "xla":
         return analytic_plan(w, m, backend="xla")
     raise ValueError(f"unknown traffic kind {kind!r}")
@@ -157,12 +195,14 @@ def measure_plan_bytes(plan, a, b, *,
 
 def traffic_rows(shapes: Sequence[Tuple[Shape, int]] = DEFAULT_SHAPES,
                  *, w: int = DEFAULT_W, m: int = 8,
+                 kinds: Sequence[str] = TRAFFIC_KINDS,
                  interpret: Optional[bool] = None) -> List[Dict]:
     """Measured-vs-analytic traffic rows for every path at every shape.
 
     One row per (kind, shape) with ``measured_bytes`` / ``analytic_bytes``
-    / ``measured_over_analytic``, plus one ``fused_over_staged_bytes`` row
-    per shape — the committed form of the paper's traffic claim.
+    / ``measured_over_analytic``, plus one ``<fused>_over_<staged>_bytes``
+    row per shape for every measured (fused, staged) pair — the committed
+    form of the paper's traffic claim, per kernel window.
     """
     from repro.kernels import ops
     from repro.tune.runner import make_operands
@@ -174,7 +214,7 @@ def traffic_rows(shapes: Sequence[Tuple[Shape, int]] = DEFAULT_SHAPES,
         tag = f"{M}x{K}x{N}"
         a, b = make_operands(shape, w)
         measured: Dict[str, float] = {}
-        for kind in TRAFFIC_KINDS:
+        for kind in kinds:
             plan = _plan_for(kind, w, m, tiles)
             try:
                 lowered = ops.run_plan_jit.lower(a, b, plan, interpret)
@@ -200,15 +240,88 @@ def traffic_rows(shapes: Sequence[Tuple[Shape, int]] = DEFAULT_SHAPES,
                 "flops": got["flops"],
                 "method": got["method"],
             })
-        if measured.get("fused") and measured.get("staged"):
-            rows.append({
-                "bench": "roofline",
-                "name": f"roofline/traffic_fused_over_staged_bytes_{tag}",
-                "shape": tag, "w": w,
-                "bytes_ratio": round(measured["fused"] / measured["staged"],
-                                     4),
-                "expect": "< 1.0 (single-pass kernel vs staged pipeline)",
-            })
+        for fk, sk in FUSED_PAIRS:
+            if measured.get(fk) and measured.get(sk):
+                suffix = "" if fk == "fused" else f"_w{w}"
+                rows.append({
+                    "bench": "roofline",
+                    "name": (f"roofline/traffic_{fk}_over_{sk}_bytes"
+                             f"{suffix}_{tag}"),
+                    "shape": tag, "w": w,
+                    "bytes_ratio": round(measured[fk] / measured[sk], 4),
+                    "expect": "< 1.0 (single-pass kernel vs staged "
+                              "pipeline)",
+                })
+    return rows
+
+
+def grouped_traffic_rows(shapes: Sequence[Tuple[Shape, int]]
+                         = DEFAULT_SHAPES, *, w: int = GROUPED_W,
+                         m: int = 8, n_experts: int = GROUPED_EXPERTS,
+                         interpret: Optional[bool] = None) -> List[Dict]:
+    """Measured traffic of the ragged grouped-expert fused launch.
+
+    Lowered through :func:`repro.kernels.fused_gemm.fused_gemm_grouped`
+    with a live (E, 1) counts operand — the serve MoE path's kernel —
+    against the analytic model of ``n_experts`` dense fused launches.
+    """
+    import jax.numpy as jnp
+    from repro.kernels.fused_gemm import fused_gemm_grouped
+    from repro.tune.runner import make_operands
+
+    rows: List[Dict] = []
+    for (shape, bk) in shapes:
+        M, K, N = shape
+        tiles = (min(128, M), min(128, N), bk)
+        tag = f"{n_experts}x{M}x{K}x{N}"
+        a, b = make_operands(shape, w)
+        ag = jnp.broadcast_to(a[None], (n_experts,) + a.shape)
+        bg = jnp.broadcast_to(b[None], (n_experts,) + b.shape)
+        counts = jnp.full((n_experts, 1), M, dtype=jnp.int32)
+        try:
+            lowered = fused_gemm_grouped.lower(
+                ag, bg, counts=counts, w=w, m=m, seg=M,
+                block_m=tiles[0], block_n=tiles[1], block_k=tiles[2],
+                interpret=interpret)
+            got = measure_costs(lowered)
+        except Exception as e:
+            rows.append({"bench": "roofline",
+                         "name": f"roofline/traffic_grouped_w{w}_{tag}",
+                         "kind": "grouped", "shape": tag, "w": w,
+                         "dominant": "ERROR",
+                         "note": f"{type(e).__name__}: {e}"[:120]})
+            continue
+        ana = analytic_bytes("grouped", shape, w=w, m=m, tiles=tiles,
+                             n_experts=n_experts)
+        rows.append({
+            "bench": "roofline",
+            "name": f"roofline/traffic_grouped_w{w}_{tag}",
+            "kind": "grouped", "shape": tag, "w": w,
+            "tiles": "x".join(str(t) for t in tiles),
+            "measured_bytes": got["bytes"],
+            "analytic_bytes": ana,
+            "measured_over_analytic": round(got["bytes"] / ana, 4)
+            if ana else 0.0,
+            "flops": got["flops"],
+            "method": got["method"],
+        })
+    return rows
+
+
+def all_traffic_rows(shapes: Sequence[Tuple[Shape, int]] = DEFAULT_SHAPES,
+                     *, m: int = 8,
+                     interpret: Optional[bool] = None) -> List[Dict]:
+    """Every committed traffic row: the original w=12 fused/staged/xla
+    sweep plus the PR-9 windows (fused_mm2 at w=15, depth-2 at w=20, the
+    ragged grouped launch) over the same shapes."""
+    rows = traffic_rows(shapes, w=DEFAULT_W, m=m, interpret=interpret)
+    by_w: Dict[int, List[str]] = {}
+    for kind, kw in EXTENDED_KINDS:
+        by_w.setdefault(kw, []).append(kind)
+    for kw, kinds in sorted(by_w.items()):
+        rows.extend(traffic_rows(shapes, w=kw, m=m, kinds=kinds,
+                                 interpret=interpret))
+    rows.extend(grouped_traffic_rows(shapes, m=m, interpret=interpret))
     return rows
 
 
@@ -227,12 +340,13 @@ def traffic_checks(rows: Sequence[Dict]) -> List[Tuple[str, bool, str]]:
         by_shape.setdefault(r["shape"], {})[r["kind"]] = r["measured_bytes"]
         by_kind.setdefault(r["kind"], []).append(r["measured_over_analytic"])
     for tag, kinds in sorted(by_shape.items()):
-        if "fused" in kinds and "staged" in kinds:
-            ratio = kinds["fused"] / kinds["staged"] if kinds["staged"] else 0
-            checks.append(
-                (f"fused measured bytes <= staged at {tag}",
-                 0 < kinds["fused"] <= kinds["staged"],
-                 f"fused/staged = {ratio:.3f}"))
+        for fk, sk in FUSED_PAIRS:
+            if fk in kinds and sk in kinds:
+                ratio = kinds[fk] / kinds[sk] if kinds[sk] else 0
+                checks.append(
+                    (f"{fk} measured bytes <= {sk} at {tag}",
+                     0 < kinds[fk] <= kinds[sk],
+                     f"{fk}/{sk} = {ratio:.3f}"))
     lo, hi = RATIO_WINDOW
     for r in measured:
         checks.append(

@@ -158,7 +158,7 @@ def _fused_plan_for(shape, w: int, m: int, context: Optional[ExecContext]):
     """Resolve + tile-clamp the pallas plan for a (local) GEMM shape, and
     check the kernel's correctness bounds.  Returns None on any bound
     failure (the XLA fallback applies, table-independent)."""
-    from repro.tune.space import digit_accum_k_bound   # lazy: tune -> ops
+    from repro.tune.space import plan_accum_k_bound    # lazy: tune -> ops
 
     m_dim, k_dim, n_dim = shape
     table = context.resolve_table() if context is not None else None
@@ -167,17 +167,44 @@ def _fused_plan_for(shape, w: int, m: int, context: Optional[ExecContext]):
         plan = _shrink_tiles(plan, shape)
     # Correctness bounds (identical with or without a table; outside them
     # the XLA fallback applies either way, keeping numerics table-free).
+    # The accumulator bound is plan-aware: MM2's pre-adder-free digits and
+    # depth-2's quarter-width leaves stretch the exact-K window well past
+    # the single-level KMM2 bound (tune.space.plan_accum_k_bound).
     if plan.is_exact_int and max_exact_k(w) < k_dim:
         return None
     kp = -(-k_dim // plan.block_k) * plan.block_k
-    if w > m and kp > digit_accum_k_bound(w):
+    bound = plan_accum_k_bound(plan)
+    if bound is not None and kp > bound:
         return None
     return plan
 
 
+def _fused_mode(plan) -> str:
+    """The fused kernel's mode string for an ExecPlan routed to it."""
+    if plan.variant == "fused_mm2":
+        return "mm2"
+    return "kmm4" if plan.depth == 2 else "auto"
+
+
+def _ragged_row_mask(counts: Array, seg: int, c_dim: int) -> Array:
+    """(E, C, 1) liveness of capacity-bucketed expert rows: row ``r`` is
+    live iff ``r % seg < counts[e, r // seg]`` — the same predicate the
+    ragged grouped kernel evaluates in-kernel, evaluated in jnp for the
+    XLA fallback and staged-redirect paths so the grouped ragged contract
+    (dead rows are exact zeros) holds on every backend."""
+    rows = jnp.arange(c_dim, dtype=jnp.int32)
+    seg_ids = rows // seg
+    n_seg = counts.shape[-1]
+    limit = jnp.take(counts.astype(jnp.int32),
+                     jnp.clip(seg_ids, 0, n_seg - 1), axis=-1)    # (E, C)
+    live = (rows - seg_ids * seg < limit) & (seg_ids < n_seg)
+    return live[..., None]
+
+
 def _sharded_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int,
                     m: int, dense: bool, shape, out_dtype,
-                    context: ExecContext) -> Optional[Array]:
+                    context: ExecContext, counts: Optional[Array] = None,
+                    seg: Optional[int] = None) -> Optional[Array]:
     """Shard-mapped pallas GEMM under ``context.mesh`` (DESIGN.md §12).
 
     Each shard runs the unmodified kernel on its local block; the
@@ -205,21 +232,27 @@ def _sharded_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int,
         sg.log_fallback(shape, w, reason)
         return None
     m_dim, k_dim, n_dim = shape
-    if plan.variant == "fused":
+    if plan.variant in ("fused", "fused_mm2"):
         plan = replace(plan, epilogue="dequant", shard=spec)
+        mode = _fused_mode(plan)
 
-        def local_fused(qxl, qwl, sxl, swl):
+        def local_fused(qxl, qwl, sxl, swl, *cnt):
             fn = fused_gemm if dense else fused_gemm_grouped
-            return fn(qxl, qwl, sxl, swl, w=w, m=m, block_m=plan.block_m,
-                      block_n=plan.block_n, block_k=plan.block_k,
-                      combine_int32=plan.combine_int32, out_dtype=out_dtype)
+            kw = {} if dense else {"counts": cnt[0] if cnt else None,
+                                   "seg": seg}
+            return fn(qxl, qwl, sxl, swl, w=w, m=m, mode=mode,
+                      block_m=plan.block_m, block_n=plan.block_n,
+                      block_k=plan.block_k,
+                      combine_int32=plan.combine_int32,
+                      out_dtype=out_dtype, **kw)
 
         if dense:
             f = sg.shard_dense_gemm(local_fused, mesh, spec)
             out = f(qx.reshape(m_dim, k_dim), qw,
                     sx.reshape(m_dim, 1), sw.reshape(1, n_dim))
             return out.reshape(qx.shape[:-1] + (n_dim,))
-        return sg.shard_grouped_gemm(local_fused, mesh, spec)(qx, qw, sx, sw)
+        return sg.shard_grouped_gemm(local_fused, mesh, spec,
+                                     counts=counts)(qx, qw, sx, sw)
     # Table/prior redirect inside the pinned fingerprint class: run the
     # staged plan shard-mapped through the production seam, dequant after.
     plan = replace(plan, shard=spec)
@@ -231,18 +264,24 @@ def _sharded_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int,
         return out.astype(out_dtype).reshape(qx.shape[:-1] + (n_dim,))
     local_plan = replace(plan, shard=None)
 
-    def local_staged(qxl, qwl, sxl, swl):
+    def local_staged(qxl, qwl, sxl, swl, *cnt):
         accs = [ops.run_plan(qxl[e], qwl[e], plan=local_plan)
                 for e in range(qxl.shape[0])]
         acc = jnp.stack(accs).astype(jnp.float32)
-        return (acc * (sxl * swl)).astype(out_dtype)
+        out = (acc * (sxl * swl)).astype(out_dtype)
+        if cnt:
+            out = jnp.where(_ragged_row_mask(cnt[0], seg, out.shape[1]),
+                            out, jnp.zeros_like(out))
+        return out
 
-    return sg.shard_grouped_gemm(local_staged, mesh, spec)(qx, qw, sx, sw)
+    return sg.shard_grouped_gemm(local_staged, mesh, spec,
+                                 counts=counts)(qx, qw, sx, sw)
 
 
 def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
-                  dims, out_dtype,
-                  context: Optional[ExecContext] = None) -> Optional[Array]:
+                  dims, out_dtype, context: Optional[ExecContext] = None,
+                  counts: Optional[Array] = None,
+                  seg: Optional[int] = None) -> Optional[Array]:
     """Run the GEMM + dequant epilogue on the Pallas backend.
 
     The selected plan is normally the fused single-pass kernel; a tuning
@@ -272,31 +311,34 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
         _, m_dim, k_dim = qx.shape
         n_dim = qw.shape[2]
     shape = (m_dim, k_dim, n_dim)
-    if analytic_plan(w, m, backend="pallas").variant != "fused":
+    if analytic_plan(w, m, backend="pallas").variant \
+            not in ("fused", "fused_mm2"):
         _PALLAS_FALLBACKS.inc("outside_fused_window")
-        return None                     # MM2 window / deep recursion
+        return None                     # recursion deeper than 2 levels
     if context is not None and context.mesh is not None \
             and not getattr(context.mesh, "empty", False):
         return _sharded_pallas(qx, qw, sx, sw, w, m, dense, shape,
-                               out_dtype, context)
+                               out_dtype, context, counts=counts, seg=seg)
     plan = _fused_plan_for(shape, w, m, context)
     if plan is None:
         _PALLAS_FALLBACKS.inc("kernel_bounds")
         return None
-    if plan.variant == "fused":
+    if plan.variant in ("fused", "fused_mm2"):
         plan = replace(plan, epilogue="dequant")
+        mode = _fused_mode(plan)
         if dense:
             out = fused_gemm(
                 qx.reshape(m_dim, k_dim), qw,
                 sx.reshape(m_dim, 1), sw.reshape(1, n_dim),
-                w=w, m=m, block_m=plan.block_m, block_n=plan.block_n,
-                block_k=plan.block_k, combine_int32=plan.combine_int32,
-                out_dtype=out_dtype)
+                w=w, m=m, mode=mode, block_m=plan.block_m,
+                block_n=plan.block_n, block_k=plan.block_k,
+                combine_int32=plan.combine_int32, out_dtype=out_dtype)
             return out.reshape(qx.shape[:-1] + (n_dim,))
         return fused_gemm_grouped(
-            qx, qw, sx, sw, w=w, m=m, block_m=plan.block_m,
-            block_n=plan.block_n, block_k=plan.block_k,
-            combine_int32=plan.combine_int32, out_dtype=out_dtype)
+            qx, qw, sx, sw, counts, w=w, m=m, mode=mode, seg=seg,
+            block_m=plan.block_m, block_n=plan.block_n,
+            block_k=plan.block_k, combine_int32=plan.combine_int32,
+            out_dtype=out_dtype)
     # Table/prior redirect inside the pinned fingerprint class: run the
     # selected plan through the production seam and dequant afterwards.
     if dense:
@@ -307,18 +349,32 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
     accs = [ops.run_plan(qx[e], qw[e], plan=plan)
             for e in range(qx.shape[0])]
     acc = jnp.stack(accs).astype(jnp.float32)
-    return (acc * (sx * sw)).astype(out_dtype)
+    out = (acc * (sx * sw)).astype(out_dtype)
+    if counts is not None:
+        out = jnp.where(_ragged_row_mask(counts, seg, out.shape[1]),
+                        out, jnp.zeros_like(out))
+    return out
 
 
 def _quant_gemm(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
-                dims, context: ExecContext, out_dtype) -> Array:
-    """Dequantized GEMM: fused Pallas kernel when routed, XLA otherwise."""
+                dims, context: ExecContext, out_dtype,
+                counts: Optional[Array] = None,
+                seg: Optional[int] = None) -> Array:
+    """Dequantized GEMM: fused Pallas kernel when routed, XLA otherwise.
+
+    ``counts``/``seg`` (batched expert GEMMs only) make the launch ragged:
+    on the pallas route the grouped kernel masks in-kernel and skips dead
+    m-blocks; every other route applies the identical liveness mask to its
+    output, so the contract — live rows unchanged, dead rows exact zeros —
+    is backend-independent and the MoE combine sees the same tokens either
+    way.
+    """
     if context.backend not in BACKENDS:
         raise ValueError(f"unknown backend {context.backend!r}; "
                          f"choices {BACKENDS}")
     if context.backend == "pallas" and context.force_mode == "auto":
         out = _fused_pallas(qx, qw, sx, sw, w, m, dims, out_dtype,
-                            context=context)
+                            context=context, counts=counts, seg=seg)
         if out is not None:
             _GEMM_ROUTES.inc(context.backend, "pallas")
             return out
@@ -326,7 +382,11 @@ def _quant_gemm(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
     else:
         _GEMM_ROUTES.inc(context.backend, "xla")
     acc = _int_dot(qx, qw, w, m, dims, context.force_mode)
-    return (acc * (sx * sw)).astype(out_dtype)
+    out = (acc * (sx * sw)).astype(out_dtype)
+    if counts is not None:
+        out = jnp.where(_ragged_row_mask(counts, seg, out.shape[1]),
+                        out, jnp.zeros_like(out))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -395,6 +455,45 @@ def _qbmm_bwd(w_bits, m, context, res, g):
 _qbmm_core.defvjp(_qbmm_fwd, _qbmm_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _qbmm_ragged_core(x: Array, wmat: Array, counts: Array, w_bits: int,
+                      m: int, seg: int, context: ExecContext) -> Array:
+    """Ragged batched core: ``counts`` is a *traced* integer operand (live
+    token counts change per step at serve time without retracing), so it is
+    a separate custom_vjp with a ``float0`` cotangent rather than a
+    nondiff arg of :func:`_qbmm_core`."""
+    return _qbmm_ragged_fwd_impl(x, wmat, counts, w_bits, m, seg, context)
+
+
+def _qbmm_ragged_fwd_impl(x, wmat, counts, w_bits, m, seg, context):
+    qx, sx = _quantize(x, w_bits, axis=-1)            # per (expert, row)
+    qw, sw = _quantize(wmat, w_bits, axis=1)          # per (expert, channel)
+    dims = (((2,), (1,)), ((0,), (0,)))
+    return _quant_gemm(qx, qw, sx, sw, w_bits, m, dims, context, x.dtype,
+                       counts=counts, seg=seg)
+
+
+def _qbmm_ragged_fwd(x, wmat, counts, w_bits, m, seg, context):
+    out = _qbmm_ragged_fwd_impl(x, wmat, counts, w_bits, m, seg, context)
+    return out, (x, wmat, counts)
+
+
+def _qbmm_ragged_bwd(w_bits, m, seg, context, res, g):
+    # STE through live rows only: dead rows of the forward output are hard
+    # zeros, so their cotangents must not leak into dx/dw.
+    x, wmat, counts = res
+    import numpy as _np
+    live = _ragged_row_mask(counts, seg, x.shape[1])
+    gf = jnp.where(live, g.astype(jnp.float32), 0.0)
+    dx = jnp.einsum("ecn,ekn->eck", gf, wmat.astype(jnp.float32))
+    dw = jnp.einsum("eck,ecn->ekn", x.astype(jnp.float32), gf)
+    dc = _np.zeros(counts.shape, dtype=jax.dtypes.float0)
+    return dx.astype(x.dtype), dw.astype(wmat.dtype), dc
+
+
+_qbmm_ragged_core.defvjp(_qbmm_ragged_fwd, _qbmm_ragged_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Public entry points (context-first API + deprecation shims).
 # ---------------------------------------------------------------------------
@@ -423,35 +522,56 @@ def quantized_matmul(x: Array, wmat: Array, w_bits: int, m: int = 8,
 def quantized_matmul_batched(x: Array, wmat: Array, w_bits: int,
                              m: int = 8, force_mode: Optional[str] = None,
                              backend: Optional[str] = None, *,
-                             context: Optional[ExecContext] = None) -> Array:
+                             context: Optional[ExecContext] = None,
+                             counts: Optional[Array] = None,
+                             seg: Optional[int] = None) -> Array:
     """(E, C, K) @ (E, K, N) expert GEMM, quantized to ``w_bits``.
 
     On the pallas backend all experts run as ONE grouped fused-kernel
     launch (expert axis = leading parallel grid dim) instead of an XLA
     ``kmm_n`` recursion over batched dot_generals; under ``context.mesh``
     the expert axis shards over ``model`` (expert parallelism).
+
+    ``counts`` (E, S) int32 with static ``seg`` makes the launch *ragged*:
+    expert ``e``'s C rows are S segments of ``seg`` rows, of which only the
+    first ``counts[e, s]`` are live (models/moe.py passes S = batch,
+    seg = capacity).  Live rows are bit-identical to the dense call; dead
+    rows come out as exact zeros on every backend, and on pallas their
+    m-blocks skip the MXU entirely.  ``counts`` is a traced operand (STE
+    gradients flow through x/wmat only), so serve-time count changes never
+    retrace.
     """
     ctx = _ctx(context, force_mode, backend, "quantized_matmul_batched")
     with ctx.activate():
-        return _qbmm_core(x, wmat, w_bits, m, ctx)
+        if counts is None:
+            return _qbmm_core(x, wmat, w_bits, m, ctx)
+        if seg is None or seg <= 0:
+            raise ValueError("ragged counts need a positive static seg")
+        return _qbmm_ragged_core(x, wmat, counts, w_bits, m, seg, ctx)
 
 
 def prequant_matmul(x: Array, wrec, w_bits: int, m: int = 8,
                     force_mode: Optional[str] = None, batched: bool = False,
                     backend: Optional[str] = None, *,
-                    context: Optional[ExecContext] = None) -> Array:
+                    context: Optional[ExecContext] = None,
+                    counts: Optional[Array] = None,
+                    seg: Optional[int] = None) -> Array:
     """Serving path on pre-quantized weights ({"q", "scale"} records): skips
     the runtime weight quantization (see quant/prequant.py).  Inference-only
     (not differentiable).  On the pallas backend the stored per-channel
-    scale threads straight into the fused kernel's dequant epilogue."""
+    scale threads straight into the fused kernel's dequant epilogue.
+    ``counts``/``seg`` (batched only) run the ragged grouped contract of
+    :func:`quantized_matmul_batched`."""
     ctx = _ctx(context, force_mode, backend, "prequant_matmul")
     qx, sx = _quantize(x, w_bits, axis=-1)
     qw = wrec["q"].astype(jnp.int32)
     dims = (((2,), (1,)), ((0,), (0,))) if batched \
         else (((x.ndim - 1,), (0,)), ((), ()))
+    if counts is not None and not batched:
+        raise ValueError("ragged counts require batched=True")
     with ctx.activate():
         return _quant_gemm(qx, qw, sx, wrec["scale"], w_bits, m, dims,
-                           ctx, x.dtype)
+                           ctx, x.dtype, counts=counts, seg=seg)
 
 
 def _model_context(quant) -> ExecContext:
@@ -482,12 +602,22 @@ def maybe_quantized_matmul(x: Array, wmat: Array, quant, name: str) -> Array:
     return jnp.einsum("...k,kn->...n", x, wmat.astype(x.dtype))
 
 
-def maybe_quantized_batched(x: Array, wmat: Array, quant, name: str) -> Array:
+def maybe_quantized_batched(x: Array, wmat: Array, quant, name: str,
+                            counts: Optional[Array] = None,
+                            seg: Optional[int] = None) -> Array:
+    """Expert-batched matmul through the quantized KMM path when enabled.
+
+    ``counts``/``seg`` opt into the ragged grouped contract (dead
+    capacity-bucket rows are exact zeros, live rows identical to dense) —
+    the unquantized einsum path ignores them because its callers (the MoE
+    combine) gather live slots only."""
     if isinstance(wmat, dict):
         return prequant_matmul(x, wmat, quant.bits_for(name), quant.m,
-                               batched=True, context=_model_context(quant))
+                               batched=True, context=_model_context(quant),
+                               counts=counts, seg=seg)
     if quant is not None and quant.enabled:
         return quantized_matmul_batched(x, wmat, quant.bits_for(name),
                                         quant.m,
-                                        context=_model_context(quant))
+                                        context=_model_context(quant),
+                                        counts=counts, seg=seg)
     return jnp.einsum("eck,ekn->ecn", x, wmat.astype(x.dtype))

@@ -26,6 +26,7 @@ from repro.core.complexity import (ADD, MULT, SHIFT, kmm_complexity,
 from repro.core.dispatch import (ExecPlan, VARIANTS, kmm_levels_needed,
                                  select_mode)
 from repro.core.kmm import max_exact_k
+from repro.kernels.fused_gemm import leaf_mag_bits
 
 Shape = Tuple[int, int, int]   # (M, K, N)
 
@@ -36,7 +37,18 @@ FFIP_MAX_ELEMS = 1 << 20
 VMEM_BUDGET = 12 * 1024 * 1024
 MAX_DEPTH = 3
 
-_N_ACCUM = {"mm1": 1, "kmm2": 3, "mm2": 4, "fused": 3}
+_N_ACCUM = {"mm1": 1, "kmm2": 3, "mm2": 4, "fused": 3, "fused_mm2": 4}
+
+
+def _n_accum(plan: ExecPlan) -> int:
+    """int32 digit accumulators a plan's kernel keeps live (fused depth-2
+    runs 9 leaf passes; the staged depth-2 path launches 3 KMM2 kernels of
+    3 accumulators each — same count from the cost model's view)."""
+    if plan.variant == "fused":
+        return {0: 1, 1: 3, 2: 9}.get(plan.depth, 9)
+    if plan.variant == "kmm2" and plan.depth == 2:
+        return 9
+    return _N_ACCUM.get(plan.variant, 1)
 
 
 def _tile_ok(block: int, dim: int) -> bool:
@@ -50,6 +62,36 @@ def digit_accum_k_bound(w: int) -> int:
     exactly in int32 (kmm_gemm.py: digit magnitudes ~ 2**(w/2), so headroom
     covers K up to 2**(31 - w - 2))."""
     head = 31 - w - 2
+    return 1 << head if head > 0 else 1
+
+
+def plan_accum_k_bound(plan: ExecPlan) -> Optional[int]:
+    """Per-digit int32 accumulator headroom of a *plan*: the largest padded
+    K for which every digit-product accumulator stays exact.  None for the
+    non-digit variants (mm1/xla_ref/ffip and the fused MM1 window), whose
+    single int32 accumulator is bounded by ``max_exact_k`` instead.
+
+    The bound tracks the largest magnitude entering an MXU pass
+    (:func:`repro.kernels.fused_gemm.leaf_mag_bits`): KMM2's pre-adder
+    reaches 2**h (the historical ``digit_accum_k_bound``); MM2 has no
+    pre-adder so its digits stop at 2**(h-1) and K stretches further;
+    depth-2 KMM's leaves are ~quarter-width, so K reaches
+    2**(30 - 2*bits) (one guard bit under the int32 edge) — e.g. 2**20 at
+    w=12 vs depth-1's 2**17, which is what makes depth 2 a *tuner
+    alternative* on deep-K shapes inside the KMM2 window, not just the
+    analytic default for w > 2m.
+    """
+    if plan.variant in ("mm1", "xla_ref", "ffip"):
+        return None
+    if plan.variant == "fused" and plan.w <= plan.m:
+        return None
+    if plan.variant in ("mm2", "fused_mm2"):
+        mode = "mm2"
+    elif plan.depth == 2:
+        mode = "kmm4"
+    else:
+        return digit_accum_k_bound(plan.w)
+    head = 30 - 2 * leaf_mag_bits(mode, plan.w)
     return 1 << head if head > 0 else 1
 
 
@@ -94,8 +136,10 @@ def validate(plan: ExecPlan, shape: Shape, *,
 
     if plan.variant == "fused":
         # Single-pass kernel: in-kernel digit split + correction + epilogue
-        # (kernels/fused_gemm.py).  Covers the MM1 window (w <= m, no split)
-        # and the single-level KMM2 window (m < w <= 2m - 2).
+        # (kernels/fused_gemm.py).  Covers the MM1 window (w <= m, no
+        # split), the single-level KMM2 window (m < w <= 2m - 2, depth 1)
+        # and 4-digit depth-2 KMM (depth 2, any w whose depth-2 leaves fit
+        # the multiplier: kmm_levels_needed(w, m) <= 2).
         if plan.backend != "pallas":
             return "fused kernel is pallas-only"
         if w <= m:
@@ -108,18 +152,50 @@ def validate(plan: ExecPlan, shape: Shape, *,
                 return (f"fused mm1 overflows int32: K={K} > "
                         f"max_exact_k={max_exact_k(w)}")
         else:
-            if plan.depth != 1:
-                return "fused kernel implements single-level KMM2"
-            if w > 2 * m - 2:
+            if plan.depth not in (1, 2):
+                return ("fused KMM window implements depth 1 or 2, got "
+                        f"{plan.depth}")
+            if plan.depth == 1 and w > 2 * m - 2:
                 return (f"fused kmm2 pre-adder digits exceed s8 for "
                         f"w={w} > {2*m - 2}")
+            if plan.depth == 2:
+                r_min = kmm_levels_needed(w, m)
+                if r_min is None or r_min > 2:
+                    return (f"depth-2 leaves exceed the m={m} multiplier "
+                            f"at w={w}")
+                if w < 4:
+                    return f"depth 2 splits below 1-bit digits at w={w}"
             kp = -(-K // plan.block_k) * plan.block_k
-            if kp > digit_accum_k_bound(w):
+            bound = plan_accum_k_bound(plan)
+            if kp > bound:
                 return (f"digit accumulators overflow int32: padded K={kp} > "
-                        f"{digit_accum_k_bound(w)}")
+                        f"{bound}")
             if plan.combine_int32 and max_exact_k(w) < K:
                 return (f"int32 combine fails headroom: K={K} > "
                         f"max_exact_k({w})={max_exact_k(w)}")
+    elif plan.variant == "fused_mm2":
+        # The fused kernel's 4-pass conventional boundary mode: no
+        # pre-adder, so the digit planes fit the multiplier through
+        # w <= 2m — covering the (2m-2, 2m] window KMM2 can't, and
+        # doubling as a tuner alternative inside the KMM2 window (its
+        # accumulator headroom is 4x deeper, see plan_accum_k_bound).
+        if plan.backend != "pallas":
+            return "fused_mm2 kernel is pallas-only"
+        if plan.depth != 1:
+            return f"fused_mm2 is single-level, got depth {plan.depth}"
+        if w <= m:
+            return f"fused_mm2 needs w > m ({w} <= {m})"
+        if w > 2 * m:
+            return (f"mm2 digit planes exceed the multiplier for "
+                    f"w={w} > {2*m}")
+        kp = -(-K // plan.block_k) * plan.block_k
+        bound = plan_accum_k_bound(plan)
+        if kp > bound:
+            return (f"digit accumulators overflow int32: padded K={kp} > "
+                    f"{bound}")
+        if plan.combine_int32 and max_exact_k(w) < K:
+            return (f"int32 combine fails headroom: K={K} > "
+                    f"max_exact_k({w})={max_exact_k(w)}")
     elif plan.variant == "mm1":
         if w > m:
             return f"mm1 needs w <= m ({w} > {m})"
@@ -140,19 +216,26 @@ def validate(plan: ExecPlan, shape: Shape, *,
         if 2 ** plan.depth > w:
             return f"depth {plan.depth} splits below 1-bit digits at w={w}"
         if plan.backend == "pallas":
-            if plan.depth != 1:
-                return "pallas kernels implement single-level KMM2/MM2"
-            h = -(-w // 2)
-            if plan.variant == "kmm2" and w > 2 * m - 2:
+            if plan.variant == "mm2" and plan.depth != 1:
+                return "pallas mm2 is single-level"
+            if plan.variant == "kmm2" and plan.depth not in (1, 2):
+                return "pallas kmm2 implements depth 1 or 2"
+            if plan.variant == "kmm2" and plan.depth == 1 \
+                    and w > 2 * m - 2:
                 # the paper's Fig. 10 window: As = A1 + A0 must fit m bits
                 return f"kmm2 pre-adder digits exceed s8 for w={w} > {2*m - 2}"
+            if plan.variant == "kmm2" and plan.depth == 2:
+                r_min = kmm_levels_needed(w, m)
+                if r_min is None or r_min > 2:
+                    return (f"depth-2 leaves exceed the m={m} multiplier "
+                            f"at w={w}")
             if plan.variant == "mm2" and w > 2 * m:
                 return f"mm2 digit planes exceed s8 for w={w} > {2*m}"
             kp = -(-K // plan.block_k) * plan.block_k
-            if kp > digit_accum_k_bound(w):
+            bound = plan_accum_k_bound(plan)
+            if kp > bound:
                 return (f"digit accumulators overflow int32: padded K={kp} > "
-                        f"{digit_accum_k_bound(w)}")
-            del h
+                        f"{bound}")
         else:
             # XLA digit recursion: every leaf digit must fit the multiplier.
             r_min = kmm_levels_needed(w, m)
@@ -195,20 +278,26 @@ def vmem_footprint(plan: ExecPlan) -> int:
     """
     if plan.backend != "pallas":
         return 0
-    n_acc = _N_ACCUM.get(plan.variant, 1)
-    if plan.variant == "fused":
-        # Raw-operand tiles (int8 carrier in the MM1 window, int16
-        # above it), 1 or 3 digit accumulators, plus the zero-point
-        # rowsum/colsum scratch and the dequant-epilogue scale tiles.
-        opd = 1 if plan.w <= plan.m else 2
-        n_acc = 1 if plan.w <= plan.m else 3
+    n_acc = _n_accum(plan)
+    if plan.variant in ("fused", "fused_mm2"):
+        # Raw-operand tiles (narrowest carrier: int8 in the MM1 window,
+        # int16 through w = 16, int32 beyond), the mode's digit
+        # accumulators (1 / 3 / 4 / 9), plus the zero-point rowsum/colsum
+        # scratch and the dequant-epilogue scale tiles.
+        opd = (1 if plan.variant == "fused" and plan.w <= plan.m else
+               2 if plan.w <= 16 else 4)
         return (opd * (plan.block_m * plan.block_k
                        + plan.block_k * plan.block_n)
                 + (n_acc + 1) * plan.block_m * plan.block_n * 4
                 + 4 * 2 * (plan.block_m + plan.block_n))
+    # Staged plane kernels launch one level at a time: depth-2 kmm2 runs
+    # three single-level launches on int16 planes, so its *per-launch*
+    # footprint is the single-level kernel's with 2-byte planes.
+    plane_bytes = 2 if (plan.variant == "kmm2" and plan.depth == 2) else 1
+    n_acc = min(n_acc, 4)
     planes = 1 if plan.variant == "mm1" else 2
-    return (planes * (plan.block_m * plan.block_k
-                      + plan.block_k * plan.block_n)        # s8 inputs
+    return (planes * plane_bytes * (plan.block_m * plan.block_k
+                                    + plan.block_k * plan.block_n)
             + (n_acc + 1) * plan.block_m * plan.block_n * 4)    # acc+out
 
 
@@ -250,17 +339,24 @@ def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                 yield from emit(ExecPlan(
                     "mm1", w, m, backend="pallas", block_m=bm, block_n=bn,
                     block_k=bk, combine_int32=True, depth=0, source="space"))
-                for ci in ((True,) if w <= m else (False, True)):
+                for depth in ((0,) if w <= m else (1, 2)):
+                    for ci in ((True,) if w <= m else (False, True)):
+                        yield from emit(ExecPlan(
+                            "fused", w, m, backend="pallas", block_m=bm,
+                            block_n=bn, block_k=bk, combine_int32=ci,
+                            depth=depth, source="space"))
+                for ci in (False, True):
                     yield from emit(ExecPlan(
-                        "fused", w, m, backend="pallas", block_m=bm,
+                        "fused_mm2", w, m, backend="pallas", block_m=bm,
                         block_n=bn, block_k=bk, combine_int32=ci,
-                        depth=0 if w <= m else 1, source="space"))
-                for variant in ("kmm2", "mm2"):
+                        depth=1, source="space"))
+                for variant, depth in (("kmm2", 1), ("kmm2", 2),
+                                       ("mm2", 1)):
                     for ci in (False, True):
                         yield from emit(ExecPlan(
                             variant, w, m, backend="pallas", block_m=bm,
                             block_n=bn, block_k=bk, combine_int32=ci,
-                            depth=1, source="space"))
+                            depth=depth, source="space"))
 
 
 def cost_prior(plan: ExecPlan, shape: Shape) -> float:
@@ -297,16 +393,17 @@ def cost_prior(plan: ExecPlan, shape: Shape) -> float:
             mults = ops.total_of(MULT) * Mp * Np * Kp
             combine = (ops.total_of(ADD) + ops.total_of(SHIFT)) * Mp * Np
     # fp32 combine costs one extra cast/round per accumulator per output.
-    if not plan.combine_int32 and plan.variant in ("kmm2", "mm2", "fused"):
-        combine += _N_ACCUM[plan.variant] * Mp * Np
+    if not plan.combine_int32 \
+            and plan.variant in ("kmm2", "mm2", "fused", "fused_mm2"):
+        combine += _n_accum(plan) * Mp * Np
     # Memory-traffic asymmetry of the Pallas digit paths: the staged kernels
-    # materialize four digit-plane arrays in HBM and rebuild the zero-point
-    # sums in two more passes; the fused kernel splits in-register but
-    # recomputes each operand tile's split once per reuse across the other
-    # grid axis.
+    # materialize the digit-plane arrays in HBM (twice as many at depth 2)
+    # and rebuild the zero-point sums in two more passes; the fused kernel
+    # splits in-register but recomputes each operand tile's split once per
+    # reuse across the other grid axis.
     if plan.backend == "pallas" and plan.variant in ("kmm2", "mm2"):
-        combine += 3.0 * (Mp * Kp + Kp * Np)
-    elif plan.variant == "fused" and plan.w > plan.m:
+        combine += 3.0 * (plan.digits // 2) * (Mp * Kp + Kp * Np)
+    elif plan.variant in ("fused", "fused_mm2") and plan.w > plan.m:
         combine += 0.5 * (Mp * Kp * (Np // bn) + Kp * Np * (Mp // bm))
     return mults + combine + 512.0 * grid
 

@@ -64,15 +64,90 @@ def test_fused_bit_identical_to_staged_and_mirror(w, mkn):
             np.testing.assert_array_equal(out.astype(np.int64), oracle)
 
 
-@pytest.mark.parametrize("w", [4, 8, 12, 14])
+def _i64_oracle_atol(w: int, k: int) -> float:
+    """fp32-combine noise floor vs the int64 oracle: casting an int32 digit
+    accumulator (|value| <= K * 2^(2w-2) per digit pair) to fp32 rounds at
+    2^-24 relative; a few combine ops keep the error within a small
+    multiple.  Real correction bugs (a dropped z*colsum or z^2*K term) sit
+    orders of magnitude above this at the test shapes."""
+    return max(1.0, k * 2.0 ** (2 * w) * 2.0 ** -24)
+
+
+@pytest.mark.parametrize("w", [14, 15, 16])
+@pytest.mark.parametrize("mkn", HOSTILE_SHAPES)
+def test_fused_mm2_bit_identical_to_staged_and_mirror(w, mkn):
+    """The single-pass MM2 boundary mode (w = 2m-1, 2m): fused_mm2 must
+    reproduce the staged Pallas MM2 pipeline AND the pure-jnp mirror
+    bit-for-bit, and sit at the fp32 noise floor of the int64 oracle.
+    w=14 runs the 4-pass mode *inside* the KMM2 window — the mode is valid
+    anywhere in (m, 2m], not just on the boundary."""
+    a, b = runner.make_operands(mkn, w, seed=w)
+    oracle = ref_int_gemm_i64(np.asarray(a), np.asarray(b))
+    for tiles in TILE_COMBOS:
+        bm, bn, bk = tiles
+        fused = ExecPlan("fused_mm2", w, backend="pallas", block_m=bm,
+                         block_n=bn, block_k=bk, depth=1)
+        staged = ExecPlan("mm2", w, backend="pallas", block_m=bm,
+                          block_n=bn, block_k=bk, depth=1)
+        out = np.asarray(ops.run_plan_jit(a, b, fused))
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, staged)),
+            err_msg=f"fused_mm2 != staged mm2 at w={w} tiles={tiles}")
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, fused,
+                                             use_ref_kernels=True)),
+            err_msg=f"fused_mm2 != jnp mirror at w={w} tiles={tiles}")
+        np.testing.assert_allclose(
+            out.astype(np.float64), oracle, rtol=0,
+            atol=_i64_oracle_atol(w, mkn[1]),
+            err_msg=f"fused_mm2 off the oracle at w={w} tiles={tiles}")
+
+
+@pytest.mark.parametrize("w", [8, 12, 15, 20])
+@pytest.mark.parametrize("mkn", HOSTILE_SHAPES)
+def test_fused_depth2_bit_identical_to_staged_and_mirror(w, mkn):
+    """Depth-2 fused recursion (9 MXU passes, nested Fig. 8 pre-adders in
+    VMEM): bit-identical to the staged two-level plane pipeline and the
+    jnp mirror, fp32-noise-close to the int64 oracle.  Depth 2 is forced
+    below its analytic window too (w=8/12/15) — the nested split must be
+    valid anywhere ``kmm_levels_needed(w, m) <= 2``."""
+    a, b = runner.make_operands(mkn, w, seed=w)
+    oracle = ref_int_gemm_i64(np.asarray(a), np.asarray(b))
+    for tiles in TILE_COMBOS:
+        bm, bn, bk = tiles
+        fused = ExecPlan("fused", w, backend="pallas", block_m=bm,
+                         block_n=bn, block_k=bk, depth=2)
+        staged = ExecPlan("kmm2", w, backend="pallas", block_m=bm,
+                          block_n=bn, block_k=bk, depth=2)
+        out = np.asarray(ops.run_plan_jit(a, b, fused))
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, staged)),
+            err_msg=f"fused d2 != staged d2 at w={w} tiles={tiles}")
+        np.testing.assert_array_equal(
+            out, np.asarray(ops.run_plan_jit(a, b, fused,
+                                             use_ref_kernels=True)),
+            err_msg=f"fused d2 != jnp mirror at w={w} tiles={tiles}")
+        np.testing.assert_allclose(
+            out.astype(np.float64), oracle, rtol=0,
+            atol=_i64_oracle_atol(w, mkn[1]),
+            err_msg=f"fused d2 off the oracle at w={w} tiles={tiles}")
+
+
+@pytest.mark.parametrize("w", [4, 8, 12, 14, 15, 16, 20])
 def test_fused_pruned_space_candidates_pass_the_gate(w):
     """Every fused plan the pruned tune space emits must pass the runner's
-    bit-exact correctness gate (the same gate the autotuner applies)."""
+    bit-exact correctness gate (the same gate the autotuner applies) —
+    including the fused_mm2 boundary mode (w=15, 16) and fused depth-2
+    (w=20)."""
     shape = (16, 32, 16)
     cands = [p for p in space.pruned_space(shape, w, backend="pallas",
                                            tile_choices=(32, 64))
-             if p.variant == "fused"]
+             if p.variant in ("fused", "fused_mm2")]
     assert cands, f"no fused candidates at w={w}"
+    if w in (15, 16):
+        assert any(p.variant == "fused_mm2" for p in cands)
+    if w == 20:
+        assert any(p.depth == 2 for p in cands)
     a, b = runner.make_operands(shape, w, seed=w)
     for plan in cands:
         ok, err = runner.check_plan(plan, a, b)
@@ -81,16 +156,21 @@ def test_fused_pruned_space_candidates_pass_the_gate(w):
 
 def test_fused_analytic_default_covers_windows():
     """backend='pallas' analytic dispatch: fused for MM1 + KMM2 windows,
-    staged MM2 above, staged recursion for w > 16."""
+    fused_mm2 on the (2m-2, 2m] boundary, fused depth-2 for 4-digit
+    recursion; only depth >= 3 stays staged."""
     for w in (4, 8):
         plan = analytic_plan(w, backend="pallas")
         assert plan.variant == "fused" and plan.is_exact_int
     for w in (9, 12, 14):
         plan = analytic_plan(w, backend="pallas")
         assert plan.variant == "fused" and plan.depth == 1
-    assert analytic_plan(15, backend="pallas").variant == "mm2"
-    assert analytic_plan(16, backend="pallas").variant == "mm2"
-    assert analytic_plan(20, backend="pallas").variant == "kmm2"
+    for w in (15, 16):
+        plan = analytic_plan(w, backend="pallas")
+        assert plan.variant == "fused_mm2" and plan.depth == 1
+    for w in (17, 20, 26):
+        plan = analytic_plan(w, backend="pallas")
+        assert plan.variant == "fused" and plan.depth == 2
+    assert analytic_plan(28, backend="pallas").variant == "kmm2"
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +234,65 @@ def test_fused_grouped_dequant_epilogue():
     out = np.asarray(fused_gemm_grouped(a, b, sx, sw, **kw))
     acc = np.asarray(fused_gemm_grouped(a, b, **kw))
     np.testing.assert_array_equal(out, acc * np.asarray(sx * sw))
+
+
+@pytest.mark.parametrize("w", [8, 12])
+def test_fused_grouped_ragged_counts_property(w):
+    """Ragged contract: with (E, S) live counts and static seg, every live
+    row is bit-identical to the dense per-expert result and every dead row
+    is an exact zero — including experts with zero live tokens in a
+    segment and a fully-dead expert.  Accumulation is untouched (output
+    masking only), so liveness never changes a live row's bits."""
+    e, seg, n_seg, k, n = 4, 8, 3, 70, 9
+    c = seg * n_seg
+    rng = np.random.default_rng(w)
+    lim = 2 ** (w - 1)
+    a = jnp.asarray(rng.integers(-lim, lim, (e, c, k)), jnp.int32)
+    b = jnp.asarray(rng.integers(-lim, lim, (e, k, n)), jnp.int32)
+    sx = jnp.asarray(rng.random((e, c, 1)), jnp.float32)
+    sw = jnp.asarray(rng.random((e, 1, n)), jnp.float32)
+    counts = jnp.asarray([[3, 8, 0],     # partial, full, empty segments
+                          [0, 0, 0],     # fully-dead expert
+                          [8, 8, 8],     # fully-live expert
+                          [1, 0, 5]], jnp.int32)
+    kw = dict(w=w, seg=seg, block_m=32, block_n=32, block_k=32)
+    out = np.asarray(fused_gemm_grouped(a, b, sx, sw, counts=counts, **kw))
+    dense = np.asarray(fused_gemm_grouped(
+        a, b, sx, sw, w=w, block_m=32, block_n=32, block_k=32))
+    live = (np.arange(c)[None, :] % seg
+            < np.asarray(counts)[:, np.arange(c) // seg])       # (E, C)
+    np.testing.assert_array_equal(
+        out[live], dense[live], err_msg="live rows moved bits")
+    np.testing.assert_array_equal(
+        out[~live], np.zeros_like(out[~live]),
+        err_msg="dead rows must be exact zeros")
+    # raw-accumulator (no dequant) path honors the same contract
+    acc = np.asarray(fused_gemm_grouped(a, b, counts=counts, **kw))
+    acc_dense = np.asarray(fused_gemm_grouped(
+        a, b, w=w, block_m=32, block_n=32, block_k=32))
+    np.testing.assert_array_equal(acc[live], acc_dense[live])
+    assert not acc[~live].any()
+
+
+def test_quantized_batched_ragged_pallas_matches_xla():
+    """The serve seam: quantized_matmul_batched with ragged counts must be
+    token-identical between the pallas grouped kernel and the XLA
+    fallback — dead rows are exact zeros on BOTH backends (the contract is
+    backend-independent, so numerics pinning sees one class)."""
+    rng = np.random.default_rng(11)
+    e, c, k, n, seg = 3, 12, 32, 8, 4
+    xb = jnp.asarray(rng.standard_normal((e, c, k)), jnp.float32)
+    wb = jnp.asarray(rng.standard_normal((e, k, n)), jnp.float32)
+    counts = jnp.asarray([[4, 0, 2], [0, 0, 0], [4, 4, 4]], jnp.int32)
+    for w in (8, 12):
+        xla = np.asarray(quantized_matmul_batched(
+            xb, wb, w, 8, "auto", "xla", counts=counts, seg=seg))
+        pal = np.asarray(quantized_matmul_batched(
+            xb, wb, w, 8, "auto", "pallas", counts=counts, seg=seg))
+        np.testing.assert_array_equal(xla, pal, err_msg=f"w={w}")
+        live = (np.arange(c)[None, :] % seg
+                < np.asarray(counts)[:, np.arange(c) // seg])
+        assert not xla[~live].any() and not pal[~live].any()
 
 
 # ---------------------------------------------------------------------------
@@ -222,15 +361,18 @@ def test_prequant_matmul_pallas_route():
 
 
 def test_pallas_route_falls_back_outside_fused_windows():
-    """w=16 is the MM2 window (no fused kernel): the pallas backend must
-    fall back to the XLA path, bit-identically."""
+    """w=28 needs depth-3 recursion (no fused kernel): the pallas backend
+    must fall back to the XLA path, bit-identically.  w=16 — which used to
+    fall back — now rides the fused_mm2 single pass."""
     rng = np.random.default_rng(9)
     x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
     wm = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
     np.testing.assert_array_equal(
-        np.asarray(quantized_matmul(x, wm, 16)),
-        np.asarray(quantized_matmul(x, wm, 16, 8, "auto", "pallas")))
-    assert select_plan((4, 32, 8), 16, backend="pallas").variant == "mm2"
+        np.asarray(quantized_matmul(x, wm, 28)),
+        np.asarray(quantized_matmul(x, wm, 28, 8, "auto", "pallas")))
+    assert select_plan((4, 32, 8), 28, backend="pallas").variant == "kmm2"
+    assert select_plan((4, 32, 8), 16, backend="pallas").variant \
+        == "fused_mm2"
 
 
 # ---------------------------------------------------------------------------
