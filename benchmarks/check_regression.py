@@ -21,7 +21,13 @@ substrings with no extra flags: the ``fused_over_staged_time_ratio_mm2_*``
 two-level, w=20) walltime rows match ``fused_over_staged``, and the
 ``roofline/traffic_{fused_mm2,staged_mm2,fused_d2,staged_d2,grouped}_*``
 traffic rows match ``roofline/`` — all gated once the committed baseline
-carries them.
+carries them.  The tile-level Strassen rows ride the same mechanism: the
+interleaved ``strassen_ratio_kmm2_over_{fused,xla}_*`` walltime rows are in
+the default ``--match`` set and the ``roofline/traffic_strassen_*`` rows
+match ``roofline/``.  Rows DROPPED from the new run fail the gate, and so
+does a ``--match`` token that matches no rows in *either* file — a renamed
+row family with a regenerated baseline would otherwise leave the gate
+silently while it kept "passing" on the remaining tokens.
 
 Serve-throughput rows are gated too: pass ``--serve-baseline
 BENCH_serve.json --serve-new /tmp/bench/BENCH_serve.json`` and the
@@ -86,6 +92,16 @@ def compare(base: Dict[str, float], new: Dict[str, float], tol: float,
         raise SystemExit("no shared GEMM rows to compare "
                          f"(match={list(match)})")
     n_fail = 0
+    # A --match token that matches NOTHING in either file is a stale gate:
+    # a whole row family was renamed (and the baseline regenerated in the
+    # same change), so every row it used to gate silently left the
+    # comparison while other tokens kept it "passing".  Dropped individual
+    # rows are caught below; this catches the rename-plus-regenerate case.
+    for tok in match or ():
+        if not any(tok in n for n in base) and not any(tok in n for n in new):
+            print(f"--match token {tok!r} matches no rows in either file "
+                  f"(stale gate)")
+            n_fail += 1
     for name in shared:
         b, v = norm(base, name), norm(new, name)
         reg = (b / v - 1.0) if higher_better else (v / b - 1.0)
@@ -119,13 +135,15 @@ def main(argv=None) -> int:
     ap.add_argument("--new", required=True)
     ap.add_argument("--tol", type=float, default=0.25)
     ap.add_argument("--match", nargs="*",
-                    default=("int_gemm", "fused_over_staged"),
+                    default=("int_gemm", "fused_over_staged",
+                             "strassen_ratio"),
                     help="row-name substrings that define the GEMM groups. "
                          "Default gates on the XLA int_gemm rows and the "
-                         "paired fused/staged ratio rows — the raw "
-                         "fused_/staged_ us rows ride machine-noise bursts "
-                         "that the interleaved ratio cancels, so the ratio "
-                         "is the stable form of the same claim")
+                         "paired fused/staged + strassen ratio rows — the "
+                         "raw fused_/staged_/strassen_us rows ride "
+                         "machine-noise bursts that the interleaved ratio "
+                         "cancels, so the ratio is the stable form of the "
+                         "same claim")
     ap.add_argument("--normalize", default="",
                     help="row name to divide all non-ratio rows by "
                          "(cancels host speed for cross-machine runs)")

@@ -139,13 +139,24 @@ def schedule(widths: List[int], m: int = 8) -> List[Plan]:
 # and a tuner alternative inside the KMM2 window); "xla_ref" is a single
 # fused int32 dot_general (valid only within the int32 headroom bound);
 # "ffip" is the literal free-pipeline inner-product reference (tiny shapes
-# only).
-VARIANTS = ("mm1", "kmm2", "mm2", "fused", "fused_mm2", "xla_ref", "ffip")
+# only); "strassen" / "strassen+kmm2" are one tile-level Strassen split
+# whose 7 sub-GEMMs re-enter run_plan at w+1 — on the analytic XLA exact
+# plan and on the fused Pallas kernel respectively (core/strassen.py) —
+# exact-int by construction (int32 ring combines), valid only inside the
+# composed headroom bound tune.space.strassen_k_bound derives.
+VARIANTS = ("mm1", "kmm2", "mm2", "fused", "fused_mm2", "xla_ref", "ffip",
+            "strassen", "strassen+kmm2")
 
-_EXACT_VARIANTS = ("mm1", "xla_ref", "ffip")  # integer core, no fp32 combine
+# Integer core, no fp32 combine anywhere.  The strassen variants belong
+# here unconditionally: validate() rejects them without combine_int32, and
+# their sub-plans are themselves exact-int.
+_EXACT_VARIANTS = ("mm1", "xla_ref", "ffip", "strassen", "strassen+kmm2")
 
 # Variants whose recorded tiles reflect a real Pallas measurement (the
-# tiles-only adoption path in select_plan).
+# tiles-only adoption path in select_plan).  The strassen variants are
+# deliberately excluded: their tiles were measured on the *half-shape*
+# sub-GEMMs, so adopting them for a full-shape fused plan would transplant
+# geometry tuned for a different problem.
 _TILED_VARIANTS = ("mm1", "kmm2", "mm2", "fused", "fused_mm2")
 
 
@@ -237,7 +248,11 @@ class ExecPlan:
 def numerics_fingerprint(plan: ExecPlan):
     """Two plans with equal fingerprints produce bit-identical outputs on the
     same operands (given both pass validity).  Exact-int plans all compute
-    the same integer; fp32-combine plans are keyed by everything that changes
+    the same integer — including the strassen tile-split variants, whose
+    int32 ring combines reproduce the plain product exactly inside their
+    composed headroom bound — so a tuned table may swap strassen in or out
+    of the exact class without moving a bit; fp32-combine plans are keyed by
+    everything that changes
     rounding: variant, recursion depth and backend (the Pallas path runs on
     centered digit planes + zero-point correction, the XLA path on raw
     digits — same value, different fp32 rounding).  The fused kernel applies

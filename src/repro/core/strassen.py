@@ -1,0 +1,133 @@
+"""Tile-level Strassen decomposition composed over the digit-level KMM stack.
+
+The paper's KMM algorithm cuts multiply work 3/4 per recursion level over
+*bitwidth digits*; the same authors' Strassen multisystolic-array work
+(arXiv 2502.10063) cuts spatial multiplies 7/8 per level over *(M, N, K)
+tiles*.  The two recursions are orthogonal, so composing one level of each
+is ~0.66x multiply work — this module implements the tile level and
+delegates every sub-GEMM back through the production ``run_plan`` seam, so
+a sub-product can itself be an XLA digit recursion or the fused single-pass
+Pallas kernel.
+
+Variant contract (``STRASSEN_VARIANTS``):
+
+  * ``"strassen"``        — the 7 tile-products run on the analytic **XLA**
+    exact plan at ``w + 1`` (a plain int32 dot in the MM1 window, the
+    ``kmm_n``/``mm_n`` digit recursion with int32 combines above it).
+  * ``"strassen+kmm2"``   — the 7 tile-products run on the **fused Pallas**
+    kernel at ``w + 1`` with ``combine_int32=True``, inheriting the parent
+    plan's tiles (the sub-problem is the half-shape, so parent tiles that
+    fit the half-shape give each sub-GEMM the identical per-tile geometry
+    as the full fused launch — exactly 7/8 of its grid steps).
+
+Why ``w + 1``: Strassen's pre-additions (``A11 + A22`` etc.) grow operand
+magnitude by one bit, so every sub-plan bound — the ``max_exact_k`` int32
+headroom, the per-digit accumulator bound, the fused kernel's mode windows
+— must be evaluated at ``w + 1`` on the half-K problem.
+:func:`repro.tune.space.strassen_k_bound` composes those sub-bounds back
+into a single full-problem K bound and ``validate`` gates every candidate
+on it; within the bound no intermediate wraps and the result is the exact
+integer product (asserted against the int64 oracle across the pruned
+space and at the K-bound/K-bound+1 boundary by tests/test_strassen.py).
+
+Odd-dimension padding contract: M, K and N are zero-padded to even before
+the quadrant split and the output is sliced back.  Zero rows/columns
+contribute exact zeros through every pre-add and sub-product (``split(0)``
+handling lives inside the sub-plans, which already pad to their own tile
+multiples), so padding never changes retained outputs.
+
+This module deliberately imports only :mod:`repro.core.dispatch` — the
+executor (:mod:`repro.kernels.ops`) passes ``run_plan`` in as the
+``run_sub`` callable, keeping the dependency graph acyclic.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import ExecPlan, analytic_plan
+
+Array = jax.Array
+Shape = Tuple[int, int, int]
+
+STRASSEN_VARIANTS = ("strassen", "strassen+kmm2")
+
+
+def strassen_sub_shape(shape: Shape) -> Shape:
+    """(M, K, N) of each of the 7 sub-GEMMs: the even-padded halves."""
+    m, k, n = shape
+    return (-(-m // 2), -(-k // 2), -(-n // 2))
+
+
+def strassen_sub_plan(plan: ExecPlan) -> ExecPlan:
+    """The ExecPlan each of the 7 tile-products executes.
+
+    Derived from the parent's *variant* alone (not its ``backend`` field:
+    the backend-independent ``"strassen"`` variant is offered on both
+    sweep backends, like ``xla_ref``).  Sub-operands are pre-added sums of
+    w-bit tiles, hence ``w + 1``; combines stay int32 so the composition
+    is exact end to end.
+    """
+    if plan.variant not in STRASSEN_VARIANTS:
+        raise ValueError(f"not a strassen plan: {plan.variant!r}")
+    w_sub = plan.w + 1
+    if plan.variant == "strassen+kmm2":
+        return ExecPlan("fused", w_sub, plan.m, backend="pallas",
+                        block_m=plan.block_m, block_n=plan.block_n,
+                        block_k=plan.block_k, combine_int32=True,
+                        depth=0 if w_sub <= plan.m else 1,
+                        source=plan.source)
+    sub = analytic_plan(w_sub, plan.m, backend="xla", exact=True)
+    if sub.variant == "mm1":
+        # analytic_plan's MM1-window xla plan is the single int32 dot —
+        # canonicalize to the variant name validate()/run_plan use for it.
+        sub = replace(sub, variant="xla_ref", depth=0)
+    return replace(sub, source=plan.source)
+
+
+def _quadrants(x: Array):
+    m2, k2 = x.shape[0] // 2, x.shape[1] // 2
+    return (x[:m2, :k2], x[:m2, k2:], x[m2:, :k2], x[m2:, k2:])
+
+
+def strassen_matmul(a: Array, b: Array, *, plan: ExecPlan,
+                    run_sub: Callable[[Array, Array, ExecPlan], Array]
+                    ) -> Array:
+    """One Strassen level on (M, K) x (K, N) integer operands.
+
+    The 7 products use Strassen's classical formulas; all pre-adds and the
+    output combine are int32 ring arithmetic (exact as long as the final
+    product fits int32, which ``tune.space.validate`` guarantees via the
+    composed K bound).  ``run_sub(x, y, sub_plan)`` executes one
+    sub-GEMM — the executor passes its own ``run_plan`` so sub-products
+    ride the full dispatch stack (ref-kernel oracle mirroring included).
+    """
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    sub = strassen_sub_plan(plan)
+    ai = a.astype(jnp.int32)
+    bi = b.astype(jnp.int32)
+    if (m_dim | k_dim) & 1:
+        ai = jnp.pad(ai, ((0, m_dim & 1), (0, k_dim & 1)))
+    if (k_dim | n_dim) & 1:
+        bi = jnp.pad(bi, ((0, k_dim & 1), (0, n_dim & 1)))
+    a11, a12, a21, a22 = _quadrants(ai)
+    b11, b12, b21, b22 = _quadrants(bi)
+    p1 = run_sub(a11 + a22, b11 + b22, sub)
+    p2 = run_sub(a21 + a22, b11, sub)
+    p3 = run_sub(a11, b12 - b22, sub)
+    p4 = run_sub(a22, b21 - b11, sub)
+    p5 = run_sub(a11 + a12, b22, sub)
+    p6 = run_sub(a21 - a11, b11 + b12, sub)
+    p7 = run_sub(a12 - a22, b21 + b22, sub)
+    c11 = p1 + p4 - p5 + p7
+    c12 = p3 + p5
+    c21 = p2 + p4
+    c22 = p1 - p2 + p3 + p6
+    out = jnp.concatenate(
+        [jnp.concatenate([c11, c12], axis=1),
+         jnp.concatenate([c21, c22], axis=1)], axis=0)
+    return out[:m_dim, :n_dim]

@@ -233,9 +233,20 @@ def plan_local_bounds_ok(plan: ExecPlan, lshape: Shape, w: int,
     plus the per-shard VMEM accounting from :mod:`repro.tune.space`.
     """
     from repro.core.kmm import max_exact_k
+    from repro.core.strassen import STRASSEN_VARIANTS
     from repro.tune import space as tune_space
 
     _, k_local, _ = lshape
+    if plan.variant in STRASSEN_VARIANTS:
+        # Strassen's pre-adds and per-product accumulation must stay exact
+        # on the shard's LOCAL block: re-run the full composed-bound
+        # validation (tile split, (w+1)-bit sub-plan windows, sub tile
+        # sanity and VMEM on the local half dims) rather than mirroring
+        # its pieces here.
+        reason = tune_space.validate(plan, lshape)
+        if reason is not None:
+            return False, f"strassen bounds on local shape {lshape}: {reason}"
+        return True, ""
     if plan.is_exact_int and max_exact_k(w) < k_local:
         return False, (f"local K={k_local} > max_exact_k({w})="
                        f"{max_exact_k(w)}")

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import ExecPlan, Mode, select_plan
+from repro.core.strassen import STRASSEN_VARIANTS, strassen_matmul
 from repro.obs import trace as obs_trace
 from repro.core.kmm import kmm_n, mm_n, max_exact_k
 from repro.kernels.ffip import ffip_gemm_literal
@@ -177,6 +178,15 @@ def _run_plan_impl(a: Array, b: Array, *, plan: ExecPlan,
                                 use_ref_kernels=use_ref_kernels)
     if plan.shard is not None:
         plan = dataclasses.replace(plan, shard=None)
+    if plan.variant in STRASSEN_VARIANTS:
+        # Tile-level Strassen split (core/strassen.py): the 7 sub-GEMMs
+        # re-enter this dispatcher with the derived sub-plan, so they ride
+        # the full stack — fused Pallas kernels, interpret mode and the
+        # ref-kernel oracle mirror included.
+        def run_sub(x, y, sub_plan):
+            return _run_plan_impl(x, y, plan=sub_plan, interpret=interpret,
+                                  use_ref_kernels=use_ref_kernels)
+        return strassen_matmul(a, b, plan=plan, run_sub=run_sub)
     if plan.variant == "xla_ref":
         return ref_int_gemm(a, b)
     if plan.variant == "ffip":

@@ -169,7 +169,8 @@ def _fused_plan_for(shape, w: int, m: int, context: Optional[ExecContext]):
     # the XLA fallback applies either way, keeping numerics table-free).
     # The accumulator bound is plan-aware: MM2's pre-adder-free digits and
     # depth-2's quarter-width leaves stretch the exact-K window well past
-    # the single-level KMM2 bound (tune.space.plan_accum_k_bound).
+    # the single-level KMM2 bound, and for the strassen variants it is the
+    # composed full-problem bound (tune.space.plan_accum_k_bound).
     if plan.is_exact_int and max_exact_k(w) < k_dim:
         return None
     kp = -(-k_dim // plan.block_k) * plan.block_k
@@ -286,10 +287,11 @@ def _fused_pallas(qx: Array, qw: Array, sx: Array, sw: Array, w: int, m: int,
 
     The selected plan is normally the fused single-pass kernel; a tuning
     table may redirect to a staged Pallas plan *within the same numerics
-    fingerprint class* (select_plan pins it), in which case the staged
-    kernel runs with a post-multiply dequant — bit-identical to the fused
-    epilogue, so installing a table can never move a bit of this backend's
-    output.  Returns None — the XLA fallback — only for reasons that are
+    fingerprint class* (select_plan pins it) — including the tile-level
+    strassen variants in the exact MM1-window class — in which case the
+    redirected plan runs through ``ops.run_plan`` with a post-multiply
+    dequant — bit-identical to the fused epilogue, so installing a table
+    can never move a bit of this backend's output.  Returns None — the XLA fallback — only for reasons that are
     table-independent: unsupported dot_general dims, w outside the fused
     windows (the analytic pallas rule is not "fused"), or the runtime shape
     exceeding the kernel's correctness bounds (digit-accumulator / int32

@@ -26,6 +26,8 @@ from repro.core.complexity import (ADD, MULT, SHIFT, kmm_complexity,
 from repro.core.dispatch import (ExecPlan, VARIANTS, kmm_levels_needed,
                                  select_mode)
 from repro.core.kmm import max_exact_k
+from repro.core.strassen import (STRASSEN_VARIANTS, strassen_sub_plan,
+                                 strassen_sub_shape)
 from repro.kernels.fused_gemm import leaf_mag_bits
 
 Shape = Tuple[int, int, int]   # (M, K, N)
@@ -83,6 +85,12 @@ def plan_accum_k_bound(plan: ExecPlan) -> Optional[int]:
     """
     if plan.variant in ("mm1", "xla_ref", "ffip"):
         return None
+    if plan.variant in STRASSEN_VARIANTS:
+        # Composed full-problem bound (see strassen_k_bound): callers that
+        # check ``padded K <= bound`` (_fused_plan_for, the shard-local
+        # re-check) stay conservative — the sub-GEMMs pad the *half* K to
+        # the tile multiple, so padding the full K overestimates.
+        return strassen_k_bound(plan)
     if plan.variant == "fused" and plan.w <= plan.m:
         return None
     if plan.variant in ("mm2", "fused_mm2"):
@@ -93,6 +101,40 @@ def plan_accum_k_bound(plan: ExecPlan) -> Optional[int]:
         return digit_accum_k_bound(plan.w)
     head = 30 - 2 * leaf_mag_bits(mode, plan.w)
     return 1 << head if head > 0 else 1
+
+
+def strassen_k_bound(plan: ExecPlan) -> int:
+    """Largest full-problem K for which a strassen plan stays exact.
+
+    Composed headroom derivation (DESIGN.md §16): the tile pre-adds
+    (``A11 + A22`` etc.) produce (w+1)-bit sub-operands contracting over
+    ``Ks = ceil(K / 2)``, so every sub-plan bound applies at ``w + 1`` on
+    the half K:
+
+      * the sub-product must fit int32 worst-case ->
+        ``Ks <= max_exact_k(w + 1)``, i.e. ``K <= 2 * max_exact_k(w + 1)
+        = 2**(30 - 2w)`` — the binding constraint (it is 2x tighter than
+        the plain-product bound ``max_exact_k(w) = 2**(31 - 2w)``, the
+        price of one bit of pre-add growth);
+      * a Pallas sub-plan's per-digit accumulators must stay exact ->
+        ``Ks <= plan_accum_k_bound(sub)`` (evaluated at w+1; the XLA digit
+        recursion carries ring-exact int32 planes, so only the combine
+        bound above binds there);
+      * the recombined full output must fit int32 ->
+        ``K <= max_exact_k(w)`` (4x looser than the first term, never
+        binding — kept for the derivation's honesty).
+
+    Conservative by the same unsigned worst-case convention as
+    ``max_exact_k``; tests/test_strassen.py brute-forces the boundary at
+    K-bound / K-bound+1.
+    """
+    sub = strassen_sub_plan(plan)
+    bound = 2 * max_exact_k(sub.w)
+    if sub.backend == "pallas":
+        sub_accum = plan_accum_k_bound(sub)
+        if sub_accum is not None:
+            bound = min(bound, 2 * sub_accum)
+    return min(bound, max_exact_k(plan.w))
 
 
 def validate(plan: ExecPlan, shape: Shape, *,
@@ -208,6 +250,32 @@ def validate(plan: ExecPlan, shape: Shape, *,
         if max_exact_k(w) < K:
             return (f"mm1 overflows int32: K={K} > "
                     f"max_exact_k={max_exact_k(w)}")
+    elif plan.variant in STRASSEN_VARIANTS:
+        # One tile-level Strassen split (core/strassen.py): 7 sub-GEMMs on
+        # the even-padded (M/2, K/2, N/2) quadrants with (w+1)-bit
+        # pre-added operands.  Every sub-plan bound — mode windows, digit
+        # accumulators, tile sanity and VMEM on the *half* dims — is
+        # checked by recursing into the derived sub-plan; the explicit
+        # headroom check below is the composed-bound statement callers can
+        # reason about (strassen_k_bound).
+        if plan.depth != 1:
+            return f"strassen is one tile-split level, got depth {plan.depth}"
+        if not plan.combine_int32:
+            return ("strassen combines are int32 ring arithmetic; "
+                    "combine_int32 must be True")
+        if plan.variant == "strassen+kmm2" and plan.backend != "pallas":
+            return "strassen+kmm2 runs fused pallas sub-GEMMs; pallas only"
+        bound = strassen_k_bound(plan)
+        if K > bound:
+            return (f"strassen sub-products overflow int32: K={K} > "
+                    f"composed bound {bound} (= 2*max_exact_k({w + 1}) "
+                    f"after the one-bit pre-add growth)")
+        sub = strassen_sub_plan(plan)
+        sub_reason = validate(sub, strassen_sub_shape(shape),
+                              strict_tpu=strict_tpu)
+        if sub_reason is not None:
+            return f"strassen sub-GEMM (w={sub.w}) invalid: {sub_reason}"
+        return None
     else:  # kmm2 / mm2 digit variants
         if w < 2:
             return "digit split needs w >= 2"
@@ -276,6 +344,11 @@ def vmem_footprint(plan: ExecPlan) -> int:
     the footprint of the (possibly table-chosen) tiles must fit one core's
     VMEM regardless of how many shards the global GEMM spans.
     """
+    if plan.variant in STRASSEN_VARIANTS:
+        # What launches is the sub-kernel: 7 sequential sub-GEMMs, each
+        # with the sub-plan's own per-grid-step footprint (0 for the
+        # XLA-sub variant).
+        return vmem_footprint(strassen_sub_plan(plan))
     if plan.backend != "pallas":
         return 0
     n_acc = _n_accum(plan)
@@ -322,6 +395,12 @@ def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                              combine_int32=True, depth=0, source="space"))
     yield from emit(ExecPlan("ffip", w, m, backend=backend,
                              combine_int32=True, depth=0, source="space"))
+    # Tile-level Strassen with XLA sub-GEMMs: like xla_ref/ffip it is
+    # backend-independent (no tiles of its own), so it is offered on both
+    # sweep backends.  The fused-sub composition is tile-parameterized and
+    # emitted inside the pallas tile loop below.
+    yield from emit(ExecPlan("strassen", w, m, backend=backend,
+                             combine_int32=True, depth=1, source="space"))
 
     if backend == "xla":
         r_min = kmm_levels_needed(w, m) or 1
@@ -357,6 +436,14 @@ def candidates(shape: Shape, w: int, *, m: int = 8, backend: str = "pallas",
                             variant, w, m, backend="pallas", block_m=bm,
                             block_n=bn, block_k=bk, combine_int32=ci,
                             depth=depth, source="space"))
+                # Strassen over fused-Pallas sub-GEMMs: the tiles are the
+                # *sub-kernel's* tiles (validated against the half dims by
+                # the recursive sub-validate), so they ride the same sweep
+                # axes as every other pallas candidate.
+                yield from emit(ExecPlan(
+                    "strassen+kmm2", w, m, backend="pallas", block_m=bm,
+                    block_n=bn, block_k=bk, combine_int32=True,
+                    depth=1, source="space"))
 
 
 def cost_prior(plan: ExecPlan, shape: Shape) -> float:
@@ -369,6 +456,21 @@ def cost_prior(plan: ExecPlan, shape: Shape) -> float:
     so the prior prefers fewer, larger grid steps when VMEM allows.
     """
     M, K, N = shape
+    if plan.variant in STRASSEN_VARIANTS:
+        # 7 sub-GEMMs on the half problem, plus the tile-add plane traffic
+        # Strassen adds on top of the digit-plane traffic the sub-prior
+        # already charges: the 10 operand pre-adds read/write int32
+        # (M/2, K/2) and (K/2, N/2) planes (charged at the staged
+        # plane-pass weight of 3 units per element-pass, 5 passes per
+        # operand plane), and the 8-term output combine reads 7 product
+        # quadrants and writes 4 (23 element-passes of M/2 x N/2).
+        # Without this term the prior-only fallback would blindly prefer
+        # strassen on small shapes where the adds dominate the saved
+        # eighth of multiply work (ISSUE 10 satellite).
+        sub = strassen_sub_plan(plan)
+        Ms, Ks, Ns = strassen_sub_shape(shape)
+        adds = 15.0 * (Ms * Ks + Ks * Ns) + 23.0 * Ms * Ns
+        return 7.0 * cost_prior(sub, (Ms, Ks, Ns)) + adds + 7 * 4096.0
     bm, bn, bk = plan.tiles
     if plan.backend == "pallas":
         Mp, Np, Kp = (-(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk)

@@ -1,0 +1,65 @@
+"""benchmarks/check_regression.py gate semantics: dropped rows and stale
+--match tokens must FAIL, not silently leave the comparison."""
+import json
+import sys
+
+sys.path.insert(0, ".")                      # benchmarks/ is not a package
+from benchmarks import check_regression as cr  # noqa: E402
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"rows": rows}))
+    return str(path)
+
+
+def _row(name, val):
+    return {"bench": "walltime", "name": name, "us_per_call": val}
+
+
+def _full(strassen=0.7, fused=0.5, mm1=100.0):
+    """One row per default --match family (int_gemm, fused_over_staged,
+    strassen_ratio) so the stale-token check stays quiet."""
+    return [_row("int_gemm_w8_mm1_1024", mm1),
+            _row("fused_over_staged_time_ratio_x", fused),
+            _row("strassen_ratio_kmm2_over_fused_w9_x", strassen)]
+
+
+def test_ok_run_passes(tmp_path):
+    base = _write(tmp_path / "base.json", _full())
+    new = _write(tmp_path / "new.json", _full(strassen=0.71, mm1=101.0))
+    assert cr.main(["--baseline", base, "--new", new]) == 0
+
+
+def test_regressed_strassen_ratio_fails_under_default_match(tmp_path):
+    """Only the strassen ratio moves — so this doubles as the proof that
+    the DEFAULT --match set gates the strassen_ratio rows."""
+    base = _write(tmp_path / "base.json", _full(strassen=0.7))
+    new = _write(tmp_path / "new.json", _full(strassen=1.4))
+    assert cr.main(["--baseline", base, "--new", new]) == 1
+
+
+def test_dropped_row_fails(tmp_path):
+    """A baseline row missing from the new run is a gate failure (a rename
+    must update the baseline deliberately, not slip out of gating)."""
+    base = _write(tmp_path / "base.json",
+                  [_row("int_gemm_w8_mm1_1024", 100.0),
+                   _row("int_gemm_w12_kmm2_1024", 300.0)])
+    new = _write(tmp_path / "new.json",
+                 [_row("int_gemm_w8_mm1_1024", 100.0)])
+    assert cr.main(["--baseline", base, "--new", new,
+                    "--match", "int_gemm"]) == 1
+
+
+def test_stale_match_token_fails(tmp_path):
+    """A --match token matching NO rows in either file fails: a whole row
+    family renamed + baseline regenerated in one change would otherwise
+    leave the gate while the remaining tokens kept it green."""
+    rows = [_row("int_gemm_w8_mm1_1024", 100.0),
+            _row("fused_over_staged_time_ratio_x", 0.5)]
+    base = _write(tmp_path / "base.json", rows)
+    new = _write(tmp_path / "new.json", rows)
+    # default --match includes strassen_ratio, absent from both files
+    assert cr.main(["--baseline", base, "--new", new]) == 1
+    # explicitly matching only the present families passes
+    assert cr.main(["--baseline", base, "--new", new,
+                    "--match", "int_gemm", "fused_over_staged"]) == 0

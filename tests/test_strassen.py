@@ -1,0 +1,283 @@
+"""Tile-level Strassen composition (core/strassen.py + ISSUE 10).
+
+Covers the composed exactness bound end to end: bit-exactness of both
+strassen variants against the int64 oracle (odd shapes included),
+brute-force K-bound / K-bound+1 boundary tests mirroring
+tests/test_kmm_core.py's ``max_exact_k`` boundary test, pruned-space
+membership, the fingerprint guarantee that a tuned table cannot move bits
+by swapping strassen in or out of a numerics class, the shard-local bound
+re-check, and the cost-prior tile-add charge.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.dispatch import (ExecPlan, analytic_plan,
+                                 numerics_fingerprint, select_plan)
+from repro.core.kmm import max_exact_k
+from repro.core.strassen import (STRASSEN_VARIANTS, strassen_sub_plan,
+                                 strassen_sub_shape)
+from repro.kernels import ops
+from repro.kernels.ref import ref_int_gemm_i64
+from repro.quant.qmatmul import quantized_matmul
+from repro.tune import space
+from repro.tune.table import TuningTable, use_table
+
+
+def _plan(variant, w, m=8, tiles=(32, 32, 32)):
+    backend = "xla" if variant == "strassen" else "pallas"
+    return ExecPlan(variant, w, m, backend=backend, block_m=tiles[0],
+                    block_n=tiles[1], block_k=tiles[2], combine_int32=True,
+                    depth=1)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness vs the int64 oracle, odd shapes included.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w,m", [(4, 4), (9, 8), (12, 8)])
+@pytest.mark.parametrize("shape", [(7, 33, 5), (16, 64, 16), (30, 50, 18)])
+def test_strassen_bit_exact_vs_oracle(w, m, shape):
+    """Both variants reproduce the int64 oracle bit-for-bit, including odd
+    M/K/N (the even-padding contract) and the MM1-window sub-plans
+    (w=4, m=4: sub w=5 > m exercises the fused depth-1 sub)."""
+    rng = np.random.default_rng(w * 100 + shape[1])
+    lim = 1 << (w - 1)
+    a = rng.integers(-lim, lim, size=shape[:2], dtype=np.int32)
+    b = rng.integers(-lim, lim, size=(shape[1], shape[2]), dtype=np.int32)
+    oracle = ref_int_gemm_i64(a, b)
+    for variant in STRASSEN_VARIANTS:
+        plan = _plan(variant, w, m)
+        assert space.validate(plan, shape) is None
+        out = np.asarray(ops.run_plan_jit(jnp.asarray(a), jnp.asarray(b),
+                                          plan))
+        assert out.dtype == np.int32
+        np.testing.assert_array_equal(out.astype(np.int64), oracle,
+                                      err_msg=f"{variant} w={w} {shape}")
+        mirror = np.asarray(ops.run_plan_jit(jnp.asarray(a), jnp.asarray(b),
+                                             plan, use_ref_kernels=True))
+        np.testing.assert_array_equal(mirror, out,
+                                      err_msg=f"{variant} ref mirror")
+
+
+def test_strassen_sub_plan_derivation():
+    sk = strassen_sub_plan(_plan("strassen+kmm2", 9))
+    assert sk.variant == "fused" and sk.w == 10 and sk.depth == 1
+    assert sk.combine_int32 and sk.backend == "pallas"
+    # MM1-window parent: the sub still fits the multiplier -> depth 0
+    sk8 = strassen_sub_plan(_plan("strassen+kmm2", 7))
+    assert sk8.depth == 0 and sk8.w == 8
+    sx = strassen_sub_plan(_plan("strassen", 9))
+    assert sx.backend == "xla" and sx.w == 10 and sx.combine_int32
+    assert strassen_sub_shape((7, 33, 5)) == (4, 17, 3)
+    with pytest.raises(ValueError):
+        strassen_sub_plan(ExecPlan("fused", 9, backend="pallas"))
+
+
+# ---------------------------------------------------------------------------
+# Composed K bound: brute force at K-bound / K-bound + 1.
+# ---------------------------------------------------------------------------
+
+
+def test_strassen_k_bound_values():
+    """B(w) = 2 * max_exact_k(w+1) = 2**(30-2w): one factor-of-4 from the
+    (w+1)-bit pre-add growth, one factor-of-2 back from the half K."""
+    assert space.strassen_k_bound(_plan("strassen+kmm2", 4, m=4)) == 1 << 22
+    assert space.strassen_k_bound(_plan("strassen+kmm2", 8)) == 16384
+    assert space.strassen_k_bound(_plan("strassen+kmm2", 9)) == 4096
+    assert space.strassen_k_bound(_plan("strassen+kmm2", 12)) == 64
+    # w = 15: max_exact_k(16) = 0 -> strassen is never exact
+    assert space.strassen_k_bound(_plan("strassen+kmm2", 15)) == 0
+    # plan_accum_k_bound exposes the same composed bound to the generic
+    # padded-K callers (qmatmul, shard negotiation)
+    assert space.plan_accum_k_bound(_plan("strassen+kmm2", 9)) == 4096
+
+
+# (w, m, M=N, tiles): geometries where the boundary K executes in seconds
+# under the interpreter.  w=4 needs m=4 so the sub w=5 leaves the MM1
+# window; its bound K = 2**22 runs as 7 fused (32, 2**21, 32) sub-GEMMs.
+_BOUNDARY = (
+    (4, 4, 2, (32, 32, 65536)),
+    (8, 8, 16, (32, 32, 2048)),
+    (12, 8, 16, (32, 32, 32)),
+)
+
+
+@pytest.mark.parametrize("w,m,mn,tiles", _BOUNDARY)
+def test_strassen_boundary_brute_force(w, m, mn, tiles):
+    """At the composed bound K = 2**(30-2w): all-max unsigned w-bit
+    operands are bit-exact and every Strassen sub-product provably fits
+    int32; at K+1 ``validate`` rejects the plan.  Like ``max_exact_k``
+    (ring arithmetic), the recombined OUTPUT can stay correct past the
+    bound — the bound's claim is that no *intermediate* wraps — so the
+    K+1 assertion is the pruning boundary, and tightness (a sub-product
+    actually exceeding int31) is asserted at the undiluted even K+2 for
+    w >= 10, mirroring the w >= 11 restriction of the max_exact_k
+    boundary test."""
+    plan = _plan("strassen+kmm2", w, m, tiles)
+    k = space.strassen_k_bound(plan)
+    assert k == 1 << (30 - 2 * w)
+    assert space.validate(plan, (mn, k, mn)) is None
+    reason = space.validate(plan, (mn, k + 1, mn))
+    assert reason is not None and "strassen" in reason
+
+    hi = (1 << w) - 1
+
+    def worst_sub_products(kk):
+        """Max |sub-product| over the 7 products, int64, worst operands."""
+        ks = -(-kk // 2)
+        return 4 * ks * hi * hi          # (A11+A22)(B11+B22), all-max
+
+    assert worst_sub_products(k) < 2 ** 31        # the bound's whole claim
+    if w >= 10:
+        assert worst_sub_products(k + 2) >= 2 ** 31   # tight (undiluted)
+
+    a = np.full((mn, k), hi, np.int32)
+    b = np.full((k, mn), hi, np.int32)
+    oracle = ref_int_gemm_i64(a, b)
+    out = np.asarray(ops.run_plan_jit(jnp.asarray(a), jnp.asarray(b), plan))
+    np.testing.assert_array_equal(out.astype(np.int64), oracle)
+
+
+# ---------------------------------------------------------------------------
+# Pruned-space membership + cost prior.
+# ---------------------------------------------------------------------------
+
+
+def test_pruned_space_membership():
+    """Both variants survive where K fits the composed bound and vanish one
+    K step past it (the CI tune-smoke job asserts the same)."""
+    ok = [p.variant for p in space.pruned_space((64, 64, 64), 12,
+                                                backend="pallas",
+                                                tile_choices=(32, 64))]
+    assert "strassen" in ok and "strassen+kmm2" in ok
+    over = [p.variant for p in space.pruned_space((64, 128, 64), 12,
+                                                  backend="pallas",
+                                                  tile_choices=(32, 64))]
+    assert "strassen" not in over and "strassen+kmm2" not in over
+    # backend-independent variant rides the xla sweep too
+    xla = [p.variant for p in space.candidates((64, 64, 64), 12,
+                                               backend="xla")]
+    assert "strassen" in xla and "strassen+kmm2" not in xla
+
+
+def test_cost_prior_charges_strassen_tile_adds():
+    """The prior charges Strassen's pre-add/combine plane traffic: on small
+    shapes the adds dominate the saved eighth of multiplies and strassen
+    must NOT look cheapest, while on the deep-K flagship geometry
+    strassen+kmm2 must undercut the fused kernel (7 vs 8 equal-shape
+    sub-products)."""
+    small = (16, 32, 16)
+    t = (32, 32, 32)
+    assert space.cost_prior(_plan("strassen+kmm2", 12, tiles=t), small) > \
+        space.cost_prior(ExecPlan("fused", 12, backend="pallas", block_m=32,
+                                  block_n=32, block_k=32, depth=1), small)
+    flag, ft = (256, 4096, 256), (128, 128, 2048)
+    assert space.cost_prior(_plan("strassen+kmm2", 9, tiles=ft), flag) < \
+        space.cost_prior(ExecPlan("fused", 9, backend="pallas", block_m=128,
+                                  block_n=128, block_k=2048,
+                                  combine_int32=True, depth=1), flag)
+    # prior-only fallback never leaves the analytic numerics class for
+    # strassen (fp32 base classes exclude it by fingerprint)
+    for w in (8, 12):
+        prior = space.prior_plan(small, w, backend="pallas")
+        assert prior is not None
+        assert prior.variant not in STRASSEN_VARIANTS
+
+
+# ---------------------------------------------------------------------------
+# Tables stay speed-only: swapping strassen in/out of a class moves no bit.
+# ---------------------------------------------------------------------------
+
+
+def test_strassen_fingerprint_is_exact_class():
+    for variant in STRASSEN_VARIANTS:
+        fp = numerics_fingerprint(_plan(variant, 9))
+        assert fp == numerics_fingerprint(analytic_plan(9, backend="pallas",
+                                                        exact=True))
+
+
+def _strassen_table():
+    """Hostile/opportunistic entries: strassen at an exact key (legal
+    adoption), at an fp32-class key (must be refused), and at a key past
+    the composed bound (must be validate-discarded)."""
+    t = TuningTable()
+    t.put("pallas", (64, 64, 64), 12, _plan("strassen+kmm2", 12))
+    t.put("pallas", (64, 32, 16), 8, _plan("strassen+kmm2", 8))
+    t.put("pallas", (64, 128, 64), 12, _plan("strassen+kmm2", 12))  # K>bound
+    return t
+
+
+def test_table_swapping_strassen_cannot_move_bits():
+    rng = np.random.default_rng(21)
+    a = jnp.asarray(rng.integers(-2048, 2048, (64, 64)), jnp.int32)
+    b = jnp.asarray(rng.integers(-2048, 2048, (64, 64)), jnp.int32)
+    # exact request: the table legally swaps strassen+kmm2 in (same
+    # fingerprint class) and the output is bit-identical to tableless
+    base = np.asarray(ops.int_gemm(a, b, w=12, backend="pallas", exact=True))
+    with use_table(_strassen_table()):
+        plan = select_plan((64, 64, 64), 12, backend="pallas", exact=True)
+        assert plan.variant == "strassen+kmm2" and plan.source == "table"
+        tuned = np.asarray(ops.int_gemm(a, b, w=12, backend="pallas",
+                                        exact=True))
+    np.testing.assert_array_equal(base, tuned)
+    np.testing.assert_array_equal(
+        base.astype(np.int64),
+        ref_int_gemm_i64(np.asarray(a), np.asarray(b)))
+    # fp32-class request at the same key: strassen is exact-class, so the
+    # pin refuses the wholesale swap (and strassen is not tile-transferable)
+    with use_table(_strassen_table()):
+        plan = select_plan((64, 64, 64), 12, backend="pallas", exact=False)
+        assert plan.variant not in STRASSEN_VARIANTS
+    # past the composed bound the entry is discarded outright
+    with use_table(_strassen_table()):
+        plan = select_plan((64, 128, 64), 12, backend="pallas", exact=True)
+        assert plan.variant not in STRASSEN_VARIANTS
+
+
+def test_quantized_matmul_bit_identical_with_strassen_table():
+    """The quant path: a strassen entry in the MM1-window exact class is
+    adopted through the staged-redirect seam and the fp32 w=12 class
+    refuses it — outputs bit-identical with and without the table."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((4, 16, 32)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    for w_bits in (8, 12):
+        base = np.asarray(quantized_matmul(x, wm, w_bits))
+        with use_table(_strassen_table()):
+            tuned = np.asarray(quantized_matmul(x, wm, w_bits))
+        np.testing.assert_array_equal(base, tuned, err_msg=f"w={w_bits}")
+
+
+# ---------------------------------------------------------------------------
+# Shard-local bound re-check.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_local_bounds_recheck_strassen():
+    from repro.dist.shard_gemm import plan_local_bounds_ok
+
+    plan = _plan("strassen+kmm2", 12)
+    ok, _ = plan_local_bounds_ok(plan, (32, 64, 32), 12, 8)
+    assert ok
+    ok, reason = plan_local_bounds_ok(plan, (32, 128, 32), 12, 8)
+    assert not ok and "strassen bounds on local shape" in reason
+
+
+# ---------------------------------------------------------------------------
+# Analytic traffic model ordering (obs/traffic.py satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_bytes_strassen_ordering():
+    from repro.obs.traffic import (STRASSEN_SHAPES, STRASSEN_W,
+                                   analytic_bytes)
+
+    for (shape, bk) in STRASSEN_SHAPES:
+        tiles = (min(128, shape[0]), min(128, shape[2]), bk)
+        fused_sub = analytic_bytes("strassen_kmm2", shape, w=STRASSEN_W,
+                                   tiles=tiles)
+        xla_sub = analytic_bytes("strassen_xla", shape, w=STRASSEN_W,
+                                 tiles=tiles)
+        assert 0 < fused_sub < xla_sub, (shape, fused_sub, xla_sub)
